@@ -1,0 +1,69 @@
+"""Fig 4/5/6: cost ratio vs the ASAP baseline — medians (overall and per
+deadline factor) and boxplot statistics."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    VARIANT_NAMES,
+    build_matrix,
+    emit,
+    run_all_variants,
+    write_csv,
+)
+
+LS_VARIANTS = tuple(v for v in VARIANT_NAMES if v.endswith("-LS"))
+
+
+def run(sizes=(200,), clusters=("small",)):
+    records = []        # (factor, scenario, cluster, variant, ratio)
+    t0 = time.perf_counter()
+    n = 0
+    for case in build_matrix(sizes=sizes, clusters=clusters):
+        res = run_all_variants(case, variants=LS_VARIANTS)
+        base = res["asap"][0]
+        for v in LS_VARIANTS:
+            c = res[v][0]
+            ratio = 0.0 if base == 0 and c == 0 else (
+                c / base if base > 0 else np.inf)
+            records.append((case.factor, case.scenario, v, ratio))
+        n += 1
+    dt = time.perf_counter() - t0
+
+    med_rows, box_rows = [], []
+    med_all = {}
+    for v in LS_VARIANTS:
+        rs = np.asarray([r for f, s, vv, r in records if vv == v])
+        rs = rs[np.isfinite(rs)]
+        med_all[v] = np.median(rs)
+        q1, q2, q3 = np.percentile(rs, [25, 50, 75])
+        box_rows.append(["all", v, rs.min(), q1, q2, q3, rs.max()])
+        med_rows.append(["all", v, f"{np.median(rs):.4f}"])
+        for f in (1.0, 1.5, 2.0, 3.0):
+            rf = np.asarray([r for ff, s, vv, r in records
+                             if vv == v and ff == f])
+            rf = rf[np.isfinite(rf)]
+            med_rows.append([f, v, f"{np.median(rf):.4f}"])
+        for s in ("S1", "S2", "S3", "S4"):
+            rscen = np.asarray([r for ff, ss, vv, r in records
+                                if vv == v and ss == s])
+            rscen = rscen[np.isfinite(rscen)]
+            med_rows.append([s, v, f"{np.median(rscen):.4f}"])
+    write_csv("fig4_cost_ratio_medians.csv", ["split", "variant", "median"],
+              med_rows)
+    write_csv("fig6_cost_ratio_box.csv",
+              ["split", "variant", "min", "q1", "median", "q3", "max"],
+              box_rows)
+    best = min(med_all, key=med_all.get)
+    loose = [r for f, s, vv, r in records if vv == best and f == 3.0
+             and np.isfinite(r)]
+    emit("fig4_cost_ratio", dt / max(n, 1) * 1e6,
+         f"best_median={med_all[best]:.3f}({best})"
+         f";median@3D={np.median(loose):.3f}")
+    return records
+
+
+if __name__ == "__main__":
+    run()

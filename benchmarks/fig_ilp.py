@@ -1,0 +1,49 @@
+"""Fig 7: heuristics vs exact ILP optimum on small instances."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import VARIANT_NAMES, build_matrix, emit, run_all_variants, write_csv
+from repro.core.ilp import solve_ilp
+
+LS_VARIANTS = tuple(v for v in VARIANT_NAMES if v.endswith("-LS"))
+
+
+def run(max_tasks: int = 70, time_limit: float = 90.0):
+    rows = []
+    ratios = {v: [] for v in LS_VARIANTS + ("asap",)}
+    t0 = time.perf_counter()
+    n = 0
+    for case in build_matrix(sizes=(30,), clusters=("small",),
+                             factors=(1.5,), scenarios=("S1", "S3"),
+                             J=6):
+        if case.inst.num_tasks > max_tasks or case.profile.T > 400:
+            continue
+        ilp = solve_ilp(case.inst, case.profile, time_limit=time_limit)
+        if not np.isfinite(ilp.cost) or ilp.status != 0:
+            continue        # only PROVEN optima count (paper Fig 7)
+        res = run_all_variants(case, variants=LS_VARIANTS)
+        for v in LS_VARIANTS + ("asap",):
+            c = res[v][0]
+            r = 1.0 if (c == 0 and ilp.cost < 1e-9) else (
+                ilp.cost / c if c > 0 else 0.0)
+            ratios[v].append(r)
+            rows.append([case.name, v, c, f"{ilp.cost:.1f}", f"{r:.4f}"])
+        n += 1
+    dt = time.perf_counter() - t0
+    write_csv("fig7_ilp_ratio.csv",
+              ["case", "variant", "heur_cost", "ilp_cost", "ratio"], rows)
+    med = {v: float(np.median(r)) if r else float("nan")
+           for v, r in ratios.items()}
+    best = max((v for v in LS_VARIANTS), key=lambda v: med[v])
+    n_opt = sum(1 for v in LS_VARIANTS for r in ratios[v] if r >= 0.999)
+    emit("fig7_ilp_comparison", dt / max(n, 1) * 1e6,
+         f"median_ratio={med[best]:.3f}({best});asap={med['asap']:.3f}"
+         f";optimal_hits={n_opt}")
+    return med
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Fig 2/3: performance profiles (share of instances with ratio >= tau),
+overall and split by deadline factor."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    VARIANT_NAMES,
+    build_matrix,
+    emit,
+    run_all_variants,
+    write_csv,
+)
+
+LS_VARIANTS = tuple(v for v in VARIANT_NAMES if v.endswith("-LS"))
+TAUS = np.linspace(0.0, 1.0, 21)
+
+
+def run(sizes=(200,), clusters=("small",)):
+    records = []        # (factor, variant, ratio)
+    t0 = time.perf_counter()
+    n = 0
+    for case in build_matrix(sizes=sizes, clusters=clusters):
+        res = run_all_variants(case, variants=LS_VARIANTS)
+        best = min(c for c, _ in res.values())
+        for v in LS_VARIANTS:
+            c = res[v][0]
+            ratio = 1.0 if c == best == 0 else (
+                best / c if c > 0 else 0.0)
+            records.append((case.factor, v, ratio))
+        n += 1
+    dt = time.perf_counter() - t0
+
+    rows = []
+    summary = {}
+    for split in ("all", 1.0, 1.5, 2.0, 3.0):
+        for v in LS_VARIANTS:
+            rs = np.asarray([r for f, vv, r in records
+                             if vv == v and (split == "all" or f == split)])
+            if len(rs) == 0:
+                continue
+            curve = [(rs >= t).mean() for t in TAUS]
+            rows.append([split, v] + [f"{c:.4f}" for c in curve])
+            if split == "all":
+                summary[v] = curve[-1]      # share of instances at tau=1.0
+    write_csv("fig2_perf_profiles.csv",
+              ["split", "variant"] + [f"tau{t:.2f}" for t in TAUS], rows)
+    leader = max(summary, key=summary.get)
+    emit("fig2_perf_profile", dt / max(n, 1) * 1e6,
+         f"tau1_leader={leader};share={summary[leader]:.3f}")
+    return records
+
+
+if __name__ == "__main__":
+    run()

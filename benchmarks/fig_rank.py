@@ -1,0 +1,50 @@
+"""Fig 1: rank distribution of the 16 LS variants + ASAP across instances."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    VARIANT_NAMES,
+    build_matrix,
+    emit,
+    run_all_variants,
+    write_csv,
+)
+
+LS_VARIANTS = tuple(v for v in VARIANT_NAMES if v.endswith("-LS"))
+
+
+def run(sizes=(200,), clusters=("small",)):
+    algos = ("asap",) + LS_VARIANTS
+    ranks = {a: np.zeros(len(algos), dtype=np.int64) for a in algos}
+    worst = {a: 0 for a in algos}
+    n_cases = 0
+    t0 = time.perf_counter()
+    for case in build_matrix(sizes=sizes, clusters=clusters):
+        res = run_all_variants(case, variants=LS_VARIANTS)
+        costs = {a: res[a][0] for a in algos}
+        ordered = sorted(set(costs.values()))
+        for a in algos:
+            ranks[a][ordered.index(costs[a])] += 1
+        wc = max(costs.values())
+        for a in algos:
+            if costs[a] == wc:
+                worst[a] += 1
+        n_cases += 1
+    dt = time.perf_counter() - t0
+    rows = [[a] + list(ranks[a]) + [worst[a]] for a in algos]
+    write_csv("fig1_ranks.csv",
+              ["algo"] + [f"rank{i+1}" for i in range(len(algos))] + ["worst"],
+              rows)
+    asap_worst_pct = 100.0 * worst["asap"] / max(n_cases, 1)
+    best_rank1 = max(LS_VARIANTS, key=lambda a: ranks[a][0])
+    emit("fig1_rank_distribution", dt / max(n_cases, 1) * 1e6,
+         f"asap_worst={asap_worst_pct:.1f}%;rank1_leader={best_rank1}"
+         f";rank1_share={100.0 * ranks[best_rank1][0] / max(n_cases, 1):.1f}%")
+    return ranks, worst, n_cases
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json (run after the sweep; §Perf entries are
+maintained by hand in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+_VARIANT_MARKERS = ("_prepin", "_nofsdp", "_moesharded", "_mp.json",
+                    "_cachepin", "_moeshardmap", "mp-nofsdp")
+
+
+def _is_variant(path: str) -> bool:
+    return any(m in os.path.basename(path) for m in _VARIANT_MARKERS)
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | compile | lower+compile s | "
+             "arg bytes/dev | temp bytes/dev | collectives (once-counted) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        if _is_variant(p):
+            continue
+        d = json.load(open(p))
+        if d.get("fsdp") is False or d.get("tag"):
+            continue
+        if "skipped" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                         f"SKIP | — | — | — | {d['skipped'][:60]} |")
+            continue
+        if "hlo_once" not in d:
+            continue
+        mem = d.get("memory", {})
+        co = d["hlo_once"]["collectives"]
+        cstr = " ".join(f"{k.split('-')[-1]}:{co['counts'][k]}"
+                        for k in co["counts"] if co["counts"][k])
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | OK | "
+            f"{d.get('lower_s', 0) + d.get('compile_s', 0):.0f} | "
+            f"{_gb(mem.get('argument_size_in_bytes', 0))} | "
+            f"{_gb(mem.get('temp_size_in_bytes', 0))} | {cstr or '—'} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL_FLOPS | useful ratio | bottleneck note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("collective",): "TP/MoE activation exchanges dominate",
+        ("memory",): "HLO bytes (CPU-fusion overcount; see caveat)",
+        ("compute",): "MXU-bound",
+    }
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*_single.json"))):
+        if _is_variant(p):
+            continue
+        d = json.load(open(p))
+        if d.get("fsdp") is False or d.get("tag"):
+            continue
+        if "skipped" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | — | — | — | SKIP "
+                         f"| — | — | {d['skipped'][:50]} |")
+            continue
+        if "roofline" not in d:
+            continue
+        r, c = d["roofline"], d["cost"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {c['model_flops']:.2e} | "
+            f"{c['useful_ratio']:.3f} | {notes[(r['dominant'],)]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())
+
+
+def variants_table() -> str:
+    """Tagged §Perf variants (the optimized framework), for comparison."""
+    lines = ["| arch | shape | variant | compute s | memory s | "
+             "collective s | bound s | useful |",
+             "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*_single_*.json"))):
+        if "_prepin" in p:
+            continue
+        d = json.load(open(p))
+        if "roofline" not in d:
+            continue
+        tag = d.get("tag") or os.path.basename(p).rsplit("_", 1)[-1][:-5]
+        if not d.get("fsdp", True) and not tag:
+            tag = "nofsdp"
+        r, c = d["roofline"], d["cost"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {tag} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.4f} | **{r['bound_s']:.3f}** | "
+            f"{c['useful_ratio']:.3f} |")
+    return "\n".join(lines)

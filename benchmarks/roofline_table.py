@@ -1,0 +1,46 @@
+"""§Roofline table: read experiments/dryrun/*.json into the per-cell report."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import emit, write_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run():
+    t0 = time.perf_counter()
+    rows = []
+    n_cells = n_skip = 0
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*_single.json"))):
+        d = json.load(open(path))
+        if "skipped" in d:
+            n_skip += 1
+            rows.append([d["arch"], d["shape"], "SKIP", "", "", "", "", "",
+                         d["skipped"][:50]])
+            continue
+        if "roofline" not in d:
+            continue
+        r, c = d["roofline"], d["cost"]
+        rows.append([
+            d["arch"], d["shape"], r["dominant"],
+            f"{r['compute_s']:.4g}", f"{r['memory_s']:.4g}",
+            f"{r['collective_s']:.4g}",
+            f"{c['model_flops']:.3g}", f"{c['useful_ratio']:.3f}", "",
+        ])
+        n_cells += 1
+    write_csv("roofline_table.csv",
+              ["arch", "shape", "dominant", "compute_s", "memory_s",
+               "collective_s", "model_flops", "useful_ratio", "note"], rows)
+    dt = time.perf_counter() - t0
+    emit("roofline_table", dt * 1e6 / max(n_cells, 1),
+         f"cells={n_cells};skipped={n_skip}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

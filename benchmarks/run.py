@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV lines (and per-figure CSVs in
+benchmarks/out/). ``--full`` runs the paper-scale matrix (hours);
+the default is a faithful scaled-down matrix that finishes in minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale matrix (34 workflows, 72/144 nodes)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: rank,profile,ratio,ls,ilp,runtime,"
+                         "roofline")
+    args = ap.parse_args()
+
+    sizes = (200, 1000) if args.full else (200,)
+    clusters = ("small-full", "large-full") if args.full else ("small",)
+    want = set((args.only or "rank,profile,ratio,ls,ilp,runtime,roofline"
+                ).split(","))
+
+    print("name,us_per_call,derived")
+    if "rank" in want:
+        from benchmarks.fig_rank import run as r1
+        r1(sizes=sizes, clusters=clusters)
+    if "profile" in want:
+        from benchmarks.fig_perf_profile import run as r2
+        r2(sizes=sizes, clusters=clusters)
+    if "ratio" in want:
+        from benchmarks.fig_cost_ratio import run as r3
+        r3(sizes=sizes, clusters=clusters)
+    if "ls" in want:
+        from benchmarks.tab_local_search import run as r4
+        r4(sizes=sizes, clusters=clusters)
+    if "ilp" in want:
+        from benchmarks.fig_ilp import run as r5
+        r5()
+    if "runtime" in want:
+        from benchmarks.fig_runtime import run as r6
+        r6(sizes=(200, 1000, 4000) if args.full else (200, 1000))
+    if "roofline" in want:
+        from benchmarks.roofline_table import run as r7
+        r7()
+
+
+if __name__ == "__main__":
+    main()

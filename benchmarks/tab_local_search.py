@@ -1,0 +1,41 @@
+"""Table 2: cost ratio of with-LS vs without-LS for the refined variants."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_matrix, emit, run_all_variants, write_csv
+
+PAIRS = (("slackR-LS", "slackR"), ("slackWR-LS", "slackWR"),
+         ("pressR-LS", "pressR"), ("pressWR-LS", "pressWR"))
+
+
+def run(sizes=(200,), clusters=("small",), kinds=("atacseq", "bacass")):
+    vals = {p: [] for p in PAIRS}
+    t0 = time.perf_counter()
+    n = 0
+    for case in build_matrix(sizes=sizes, clusters=clusters, kinds=kinds):
+        res = run_all_variants(
+            case, variants=[a for p in PAIRS for a in p])
+        for ls, nols in PAIRS:
+            c_ls, c_no = res[ls][0], res[nols][0]
+            if c_no == 0:
+                vals[(ls, nols)].append(1.0 if c_ls == 0 else np.inf)
+            else:
+                vals[(ls, nols)].append(c_ls / c_no)
+        n += 1
+    dt = time.perf_counter() - t0
+    rows = []
+    for (ls, nols), rs in vals.items():
+        rs = np.asarray([r for r in rs if np.isfinite(r)])
+        rows.append([nols, rs.min(), rs.max(), f"{rs.mean():.4f}"])
+    write_csv("tab2_local_search.csv", ["variant", "min", "max", "avg"], rows)
+    avg = np.mean([float(r[3]) for r in rows])
+    emit("tab2_local_search", dt / max(n, 1) * 1e6,
+         f"avg_with/without={avg:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Serve a small model with continuously batched requests.
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 12 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model, param_count
+from repro.serve import ContinuousBatcher, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(ARCHS[args.arch]), dtype="float32")
+    model = build_model(cfg, tp=16)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {param_count(params)/1e6:.2f}M params, "
+          f"{args.slots} decode slots")
+
+    batcher = ContinuousBatcher(model, params, batch_size=args.slots,
+                                max_len=256, eos=0)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab, rng.integers(2, 6)).tolist()
+        batcher.submit(Request(rid=rid, prompt=prompt,
+                               max_tokens=args.max_new))
+
+    t0 = time.time()
+    steps = 0
+    while batcher.queue or any(r is not None and not r.done
+                               for r in batcher.slots):
+        batcher.step()
+        steps += 1
+        if steps > 10_000:
+            break
+    dt = time.time() - t0
+    done = [r for r in batcher.slots if r is not None and r.done]
+    print(f"{steps} decode steps in {dt:.1f}s "
+          f"({steps * args.slots / dt:.1f} tok/s aggregate)")
+    for r in done[:4]:
+        print(f"  req {r.rid}: {len(r.out)} tokens -> {r.out[:10]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Qwen2.5-3B [hf:Qwen/Qwen2.5-3B]. GQA kv=2, QKV bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b", family="dense",
+    num_layers=36, d_model=2048, num_heads=16, kv_heads=2,
+    d_ff=11008, vocab=151936, head_dim=128,
+    qkv_bias=True, rope_theta=1e6,
+)

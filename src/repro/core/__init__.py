@@ -1,0 +1,20 @@
+"""CaWoSched core: the paper's contribution (scheduling on G_c)."""
+from repro.core.cawosched import (  # noqa: F401
+    ALL_VARIANTS,
+    VARIANTS_BY_NAME,
+    ScheduleResult,
+    Variant,
+    deadline_from_asap,
+    schedule,
+)
+from repro.core.carbon import (  # noqa: F401
+    PowerProfile,
+    SCENARIOS,
+    generate_profile,
+    schedule_cost,
+    schedule_cost_jnp,
+    validate_schedule,
+)
+from repro.core.dag import FixedMapping, Instance, build_instance, trivial_mapping  # noqa: F401
+from repro.core.estlst import asap_schedule, compute_est, compute_lst, makespan  # noqa: F401
+from repro.core.heft import heft_mapping  # noqa: F401

@@ -1,0 +1,78 @@
+"""CaWoSched public API: the baseline + all 16 heuristic variants (paper §5).
+
+Variant names follow the paper: ``{slack|press}[W][R][-LS]``
+  W  = power-weighted score,  R = refined interval subdivision,
+  -LS = local search applied after the greedy.
+``asap`` is the carbon-unaware baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+from repro.cluster import Platform
+from repro.core.carbon import PowerProfile, schedule_cost, validate_schedule
+from repro.core.dag import Instance
+from repro.core.estlst import asap_schedule, makespan
+from repro.core.greedy import greedy_schedule
+from repro.core.local_search import local_search
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    score: str          # "slack" | "press"
+    weighted: bool
+    refined: bool
+    ls: bool
+
+    @property
+    def name(self) -> str:
+        return (self.score + ("W" if self.weighted else "")
+                + ("R" if self.refined else "")
+                + ("-LS" if self.ls else ""))
+
+
+ALL_VARIANTS: tuple[Variant, ...] = tuple(
+    Variant(score=s, weighted=w, refined=r, ls=l)
+    for s, w, r, l in itertools.product(
+        ("slack", "press"), (False, True), (False, True), (False, True))
+)
+
+VARIANTS_BY_NAME = {v.name: v for v in ALL_VARIANTS}
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    variant: str
+    start: np.ndarray
+    cost: int
+    seconds: float
+
+
+def schedule(inst: Instance, profile: PowerProfile, platform: Platform,
+             variant: str = "pressWR-LS", k: int = 3, mu: int = 10,
+             validate: bool = True) -> ScheduleResult:
+    """Run one algorithm variant (or ``asap``) on an instance."""
+    t0 = time.perf_counter()
+    if variant == "asap":
+        start = asap_schedule(inst)
+    else:
+        v = VARIANTS_BY_NAME[variant]
+        start = greedy_schedule(inst, profile, platform, score=v.score,
+                                weighted=v.weighted, refined=v.refined, k=k)
+        if v.ls:
+            start = local_search(inst, profile, platform, start, mu=mu)
+    dt = time.perf_counter() - t0
+    if validate:
+        validate_schedule(inst, profile, start)
+    return ScheduleResult(variant=variant, start=start,
+                          cost=schedule_cost(inst, profile, start),
+                          seconds=dt)
+
+
+def deadline_from_asap(inst: Instance, factor: float) -> int:
+    """Deadline = factor * ASAP makespan (paper's D, 1.5D, 2D, 3D)."""
+    return int(np.ceil(factor * makespan(inst, asap_schedule(inst))))

@@ -1,0 +1,168 @@
+"""Earliest/latest start times on G_c (paper §5.1/§5.2).
+
+Two implementations:
+  * numpy Kahn-style propagation (the paper's algorithm, the reference);
+  * a jittable level-synchronous edge-relaxation (`est_lst_jnp`) — the
+    TPU-native adaptation: topological levels are precomputed once, then one
+    ``segment_max`` per level relaxes all in-edges of that level at once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dag import Instance
+
+
+def compute_est(inst: Instance, start_fixed: np.ndarray | None = None,
+                fixed_mask: np.ndarray | None = None) -> np.ndarray:
+    """EST(v) = max over preds (EST(u) + dur(u)); fixed tasks pin their start."""
+    est = np.zeros(inst.num_tasks, dtype=np.int64)
+    for v in inst.topo:
+        ps = inst.preds(v)
+        if len(ps):
+            est[v] = int((est[ps] + inst.dur[ps]).max())
+        if fixed_mask is not None and fixed_mask[v]:
+            est[v] = start_fixed[v]
+    return est
+
+
+def compute_lst(inst: Instance, T: int, start_fixed: np.ndarray | None = None,
+                fixed_mask: np.ndarray | None = None) -> np.ndarray:
+    """LST(v) = min over succs LST(s) - dur(v); init T - dur(v)."""
+    lst = T - inst.dur
+    for v in inst.topo[::-1]:
+        ss = inst.succs(v)
+        if len(ss):
+            lst[v] = min(int(lst[ss].min() - inst.dur[v]), int(lst[v]))
+        if fixed_mask is not None and fixed_mask[v]:
+            lst[v] = start_fixed[v]
+    return lst
+
+
+def asap_schedule(inst: Instance) -> np.ndarray:
+    """The ASAP baseline (paper §5.1): start every task at its EST."""
+    return compute_est(inst)
+
+
+def makespan(inst: Instance, start: np.ndarray) -> int:
+    return int((np.asarray(start) + inst.dur).max())
+
+
+# ---------------------------------------------------------------------------
+# Incremental worklist updates used inside the greedy (paper: "updates have
+# to be made possibly for the whole graph ... O(n + |E_c|)"). We propagate
+# only where values actually change, which is equivalent but cheaper.
+# ---------------------------------------------------------------------------
+
+def raise_est_from(inst: Instance, est: np.ndarray, v: int,
+                   new_start: int, scheduled: np.ndarray) -> None:
+    """Pin task v's start and push the EST increase through its successors."""
+    if new_start > est[v]:
+        est[v] = new_start
+    work = [v]
+    while work:
+        u = work.pop()
+        ready = est[u] + inst.dur[u]
+        for s in inst.succs(u):
+            if ready > est[s]:
+                est[s] = ready
+                if not scheduled[s]:
+                    work.append(int(s))
+
+
+def lower_lst_from(inst: Instance, lst: np.ndarray, v: int,
+                   new_start: int, scheduled: np.ndarray) -> None:
+    """Pin task v's start and push the LST decrease through its predecessors."""
+    if new_start < lst[v]:
+        lst[v] = new_start
+    work = [v]
+    while work:
+        u = work.pop()
+        for p in inst.preds(u):
+            bound = lst[u] - inst.dur[p]
+            if bound < lst[p]:
+                lst[p] = bound
+                if not scheduled[p]:
+                    work.append(int(p))
+
+
+# ---------------------------------------------------------------------------
+# jnp level-synchronous relaxation
+# ---------------------------------------------------------------------------
+
+def est_lst_jnp(inst: Instance, T: int):
+    """Jittable EST/LST: one segment-max per topological level.
+
+    Returns (est, lst) as jnp arrays. Edge list is grouped by the *target's*
+    level (for EST) / the source's level (for LST); a lax.scan over levels
+    applies ``max``-relaxations with fixed shapes per level bucket (padded).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    N = inst.num_tasks
+    u = np.repeat(np.arange(N), np.diff(inst.succ_ptr))
+    v = inst.succ_idx.copy()
+    n_levels = int(inst.level.max(initial=0)) + 1
+
+    # bucket edges by target level
+    tgt_level = inst.level[v]
+    order = np.argsort(tgt_level, kind="stable")
+    u_s, v_s = u[order], v[order]
+    counts = np.bincount(tgt_level, minlength=n_levels)
+    max_bucket = int(counts.max(initial=1))
+    # pad each level bucket to max_bucket with self-loops on a dummy slot
+    eu = np.zeros((n_levels, max_bucket), dtype=np.int64)
+    ev = np.zeros((n_levels, max_bucket), dtype=np.int64)
+    evalid = np.zeros((n_levels, max_bucket), dtype=bool)
+    off = 0
+    for lvl in range(n_levels):
+        c = counts[lvl]
+        eu[lvl, :c] = u_s[off:off + c]
+        ev[lvl, :c] = v_s[off:off + c]
+        evalid[lvl, :c] = True
+        off += c
+
+    dur = jnp.asarray(inst.dur.astype(np.int32))
+
+    def est_body(est, args):
+        eu_l, ev_l, valid_l = args
+        cand = jnp.where(valid_l, est[eu_l] + dur[eu_l], 0)
+        est = est.at[ev_l].max(cand)
+        return est, None
+
+    est0 = jnp.zeros(N, dtype=jnp.int32)
+    est, _ = jax.lax.scan(
+        est_body, est0,
+        (jnp.asarray(eu), jnp.asarray(ev), jnp.asarray(evalid)))
+
+    # LST: relax in reverse level order, keyed by source level
+    src_level = inst.level[u]
+    order2 = np.argsort(-src_level, kind="stable")
+    u2, v2 = u[order2], v[order2]
+    counts2 = np.bincount(n_levels - 1 - src_level, minlength=n_levels)
+    mb2 = int(counts2.max(initial=1))
+    fu = np.zeros((n_levels, mb2), dtype=np.int64)
+    fv = np.zeros((n_levels, mb2), dtype=np.int64)
+    fvalid = np.zeros((n_levels, mb2), dtype=bool)
+    off = 0
+    for i in range(n_levels):
+        c = counts2[i]
+        fu[i, :c] = u2[off:off + c]
+        fv[i, :c] = v2[off:off + c]
+        fvalid[i, :c] = True
+        off += c
+
+    big = jnp.asarray(np.iinfo(np.int32).max // 4, dtype=jnp.int32)
+
+    def lst_body(lst, args):
+        fu_l, fv_l, valid_l = args
+        cand = jnp.where(valid_l, lst[fv_l] - dur[fu_l], big)
+        lst = lst.at[fu_l].min(cand)
+        return lst, None
+
+    lst0 = jnp.asarray((T - inst.dur).astype(np.int32))
+    lst, _ = jax.lax.scan(
+        lst_body, lst0,
+        (jnp.asarray(fu), jnp.asarray(fv), jnp.asarray(fvalid)))
+    return est, lst

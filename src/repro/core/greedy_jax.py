@@ -1,0 +1,123 @@
+"""Device-path greedy: the paper's §5.2 loop as a single ``lax.scan``.
+
+Semantically identical to ``core.greedy.greedy_schedule`` (same score order,
+same max-budget/earliest-tie placement, same dynamic splits): the scan state
+is (remaining per-unit budget, candidate mask, EST, LST); each step places
+one task and re-relaxes EST/LST over the precomputed topological levels with
+placed tasks pinned (the fixpoint equals the reference's worklist update).
+
+Intended for on-device replanning (CarbonGate-scale instances, N ~ 10^2-10^3,
+T ~ 10^3-10^4); the numpy path remains the big-instance scheduler.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster import Platform
+from repro.core.carbon import PowerProfile
+from repro.core.dag import Instance
+from repro.core.estlst import compute_est, compute_lst
+from repro.core.scores import task_order
+from repro.core.subdivide import candidate_mask
+
+
+def _level_buckets(inst: Instance):
+    N = inst.num_tasks
+    u = np.repeat(np.arange(N), np.diff(inst.succ_ptr))
+    v = inst.succ_idx.copy()
+    n_levels = int(inst.level.max(initial=0)) + 1
+
+    def bucket(key, uu, vv):
+        order = np.argsort(key, kind="stable")
+        uu, vv = uu[order], vv[order]
+        counts = np.bincount(key, minlength=n_levels)
+        mb = max(int(counts.max(initial=1)), 1)
+        eu = np.zeros((n_levels, mb), dtype=np.int32)
+        ev = np.zeros((n_levels, mb), dtype=np.int32)
+        ok = np.zeros((n_levels, mb), dtype=bool)
+        off = 0
+        for lv in range(n_levels):
+            c = counts[lv]
+            eu[lv, :c], ev[lv, :c], ok[lv, :c] = uu[off:off + c], \
+                vv[off:off + c], True
+            off += c
+        return eu, ev, ok
+
+    fwd = bucket(inst.level[v], u, v)
+    rev = bucket((n_levels - 1 - inst.level[u]), u, v)
+    return fwd, rev
+
+
+def greedy_schedule_jax(inst: Instance, profile: PowerProfile,
+                        platform: Platform, score: str = "press",
+                        weighted: bool = False, refined: bool = False,
+                        k: int = 3):
+    """Jittable greedy; returns start times (jnp int32 [N])."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    T = profile.T
+    est0 = compute_est(inst)
+    lst0 = compute_lst(inst, T)
+    if (est0 > lst0).any():
+        raise ValueError("infeasible: deadline below ASAP makespan")
+    order = task_order(inst, est0, lst0, score, weighted, platform)
+    mask0 = candidate_mask(inst, profile, refined=refined, k=k)
+    rem0 = profile.unit_budget(inst.idle_total).astype(np.int32)
+    (eu, ev, eok), (fu, fv, fok) = _level_buckets(inst)
+
+    dur = jnp.asarray(inst.dur, jnp.int32)
+    work = jnp.asarray(inst.task_work, jnp.int32)
+    tgrid = jnp.arange(T, dtype=jnp.int32)
+    pgrid = jnp.arange(T + 1, dtype=jnp.int32)
+    big = jnp.int32(np.iinfo(np.int32).max // 4)
+
+    eu_j, ev_j, eok_j = map(jnp.asarray, (eu, ev, eok))
+    fu_j, fv_j, fok_j = map(jnp.asarray, (fu, fv, fok))
+
+    def relax(est, lst, placed, start):
+        est = jnp.where(placed, start, est)
+        lst = jnp.where(placed, start, lst)
+
+        def fwd(e, args):
+            uu, vv, ok = args
+            cand = jnp.where(ok, e[uu] + dur[uu], 0)
+            return e.at[vv].max(cand), None
+
+        est, _ = lax.scan(fwd, est, (eu_j, ev_j, eok_j))
+
+        def bwd(l, args):
+            uu, vv, ok = args
+            cand = jnp.where(ok, l[vv] - dur[uu], big)
+            return l.at[uu].min(cand), None
+
+        lst, _ = lax.scan(bwd, lst, (fu_j, fv_j, fok_j))
+        est = jnp.where(placed, start, est)
+        lst = jnp.where(placed, start, lst)
+        return est, lst
+
+    def step(state, v):
+        rem, mask, est, lst, placed, start = state
+        feas = mask[:-1] & (pgrid[:-1] >= est[v]) & (pgrid[:-1] <= lst[v])
+        any_f = feas.any()
+        val = jnp.where(feas, rem, jnp.int32(-(1 << 30)))
+        s = jnp.where(any_f, jnp.argmax(val).astype(jnp.int32),
+                      est[v].astype(jnp.int32))
+        e = s + dur[v]
+        run = (tgrid >= s) & (tgrid < e)
+        rem = rem - jnp.where(run, work[v], 0).astype(rem.dtype)
+        mask = mask.at[s].set(True)
+        mask = mask.at[jnp.minimum(e, T)].set(True)
+        placed = placed.at[v].set(True)
+        start = start.at[v].set(s)
+        est, lst = relax(est, lst, placed, start)
+        return (rem, mask, est, lst, placed, start), None
+
+    state0 = (jnp.asarray(rem0), jnp.asarray(mask0),
+              jnp.asarray(est0, jnp.int32), jnp.asarray(lst0, jnp.int32),
+              jnp.zeros(inst.num_tasks, bool),
+              jnp.zeros(inst.num_tasks, jnp.int32))
+    (rem, mask, est, lst, placed, start), _ = jax.lax.scan(
+        step, state0, jnp.asarray(order, jnp.int32))
+    return start

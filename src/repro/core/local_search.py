@@ -1,0 +1,114 @@
+"""Local search (paper §5.3): hill-climbing task shifts of up to ±mu units.
+
+Numpy reference implements the paper exactly: processors in non-increasing
+P_work order, tasks left-to-right per processor, candidate new starts
+scanned earliest-to-latest, *first* improving legal move applied, rounds
+until a full gainless round.
+
+Legality of a move uses the current schedule: the new execution window must
+respect the current start times of DAG neighbours (which include the fixed
+per-processor chains) and the deadline.
+
+`repro.core.local_search_jax` provides the batched device version that
+uses the Pallas gain kernel as a move proposer and this module's
+`move_gain`/`apply_move` arithmetic for exact commits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.carbon import PowerProfile, work_timeline
+from repro.core.dag import Instance
+
+
+def dyn_bounds(inst: Instance, start: np.ndarray, v: int,
+               T: int) -> tuple[int, int]:
+    """Legal start-time range of task v given the rest of the schedule."""
+    lo, hi = 0, T - int(inst.dur[v])
+    ps = inst.preds(v)
+    if len(ps):
+        lo = max(lo, int((start[ps] + inst.dur[ps]).max()))
+    ss = inst.succs(v)
+    if len(ss):
+        hi = min(hi, int(start[ss].min()) - int(inst.dur[v]))
+    return lo, hi
+
+
+def move_gain(rem: np.ndarray, s: int, e: int, new_s: int, w: int) -> int:
+    """Exact cost gain of moving a task from [s,e) to [new_s,new_s+e-s).
+
+    ``rem`` is the remaining-budget timeline *including* the task at its old
+    position. Positive gain = cost decreases. Only the symmetric difference
+    of the two windows contributes.
+    """
+    d = new_s - s
+    if d == 0:
+        return 0
+    ln = min(abs(d), e - s)
+    if d > 0:
+        vac_lo, vac_hi = s, s + ln              # vacated units
+        occ_hi = new_s + (e - s)                # newly occupied units
+        occ_lo = occ_hi - ln
+    else:
+        vac_lo, vac_hi = e - ln, e
+        occ_lo, occ_hi = new_s, new_s + ln
+    # cost released on vacated units: deficit drops by up to w
+    rv = rem[vac_lo:vac_hi]
+    released = np.minimum(np.maximum(-rv, 0), w).sum()
+    # cost incurred on newly occupied units
+    ro = rem[occ_lo:occ_hi]
+    incurred = np.minimum(np.maximum(w - np.maximum(ro, 0), 0), w).sum()
+    return int(released - incurred)
+
+
+def apply_move(rem: np.ndarray, s: int, e: int, new_s: int, w: int) -> None:
+    """Update the remaining-budget timeline for the move."""
+    rem[s:e] += w
+    rem[new_s:new_s + (e - s)] -= w
+
+
+def local_search(inst: Instance, profile: PowerProfile, platform,
+                 start: np.ndarray, mu: int = 10,
+                 max_rounds: int | None = None) -> np.ndarray:
+    """Paper §5.3 local search; returns improved start times."""
+    T = profile.T
+    start = np.asarray(start, dtype=np.int64).copy()
+    rem = (profile.unit_budget(inst.idle_total)
+           - work_timeline(inst, T, start)).astype(np.int64)
+
+    # processors by non-increasing P_work (compute + link processors)
+    chain_order = np.argsort(
+        -platform.p_work[inst.chain_proc_ids], kind="stable")
+
+    rounds = 0
+    while True:
+        any_gain = False
+        for ci in chain_order:
+            chain = inst.proc_chains[ci]
+            for v in chain:
+                w = int(inst.task_work[v])
+                if w == 0:
+                    continue
+                s = int(start[v])
+                e = s + int(inst.dur[v])
+                lo, hi = dyn_bounds(inst, start, v, T)
+                lo = max(lo, s - mu)
+                hi = min(hi, s + mu)
+                for new_s in range(lo, hi + 1):   # earliest to latest
+                    if new_s == s:
+                        continue
+                    g = move_gain(rem, s, e, new_s, w)
+                    if g > 0:                     # first improving move
+                        apply_move(rem, s, e, new_s, w)
+                        start[v] = new_s
+                        any_gain = True
+                        break
+        rounds += 1
+        if not any_gain or (max_rounds is not None and rounds >= max_rounds):
+            break
+    return start
+
+
+def timeline_cost(rem: np.ndarray) -> int:
+    """Cost of a remaining-budget timeline: sum of per-unit deficits."""
+    return int(np.maximum(-rem, 0).sum())

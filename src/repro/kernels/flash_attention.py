@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused causal flash attention (forward).
+
+The §Perf loop identified the unfused attention score buffers as the next
+lever on the memory-dominant train cells (EXPERIMENTS §Perf, Pair 3): the
+q-chunked jnp path still materializes (QCHUNK x S) scores in HBM on the CPU
+pipeline. This kernel keeps the whole softmax in VMEM with the standard
+online-softmax recurrence:
+
+  grid = (batch*heads, q_blocks, k_blocks)      k_blocks is the reduction
+  blocks: q (BQ, hd), k/v (BK, hd), out (BQ, hd)
+  scratch: acc f32 (BQ, hd), m/l f32 (BQ, 1)
+
+Causal masking is positional (q_idx >= k_idx); fully-masked k-blocks are
+skipped. Forward-only: training integration would wrap it in jax.custom_vjp
+with the recomputation backward (future work, noted in EXPERIMENTS).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG = -1e30
+
+
+def _kernel(scale: float, seq: int, causal: bool,
+            q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+
+    def _block():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = k_pos < seq                      # padded keys
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[...]                     # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when(ki * BK <= qi * BQ + BQ - 1)(_block)
+    else:
+        _block()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool = True):
+    """Fused attention. q/k/v: [B, S, H, hd] (kv heads already expanded).
+
+    Returns [B, S, H, hd]. S is padded to the block size internally; padded
+    keys are masked, padded queries are sliced off.
+    """
+    B, S, H, hd = q.shape
+    assert k.shape == v.shape == (B, S, H, hd)
+    scale = hd ** -0.5
+    s_pad = -S % max(BQ, BK)
+
+    def prep(x):
+        x = jnp.moveaxis(x, 2, 1).reshape(B * H, S, hd)
+        return jnp.pad(x, ((0, 0), (0, s_pad), (0, 0)))
+
+    qf, kf, vf = prep(q), prep(k), prep(v)
+    sp = S + s_pad
+    grid = (B * H, sp // BQ, sp // BK)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale, S, causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, hd), jnp.float32),
+            pltpu.VMEM((BQ, 1), jnp.float32),
+            pltpu.VMEM((BQ, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :S].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: local-search gain sweep (paper §5.3, batched).
+
+For every task i and every shift delta in [-mu, mu], computes the exact
+carbon-cost gain of moving task i by delta, given the current remaining-
+budget timeline. Only the symmetric difference of the old/new execution
+windows contributes, and both difference regions lie within ``mu`` units of
+the task's start (s) or end (e). The wrapper therefore gathers two
+lane-aligned windows of the timeline per task,
+
+    win_s[i, j] = rem[s_i - PAD + j],   win_e[i, j] = rem[e_i - PAD + j],
+
+and the kernel evaluates all 2*mu+1 shifts for a tile of tasks at once:
+(TASK_TILE, W) VPU ops per shift, W = 128 lanes.
+
+Gain identities (rem includes the task at its old position; the newly
+occupied region never overlaps the old window, so rem == rem-without-task
+there):
+  released(t) = min(max(-rem[t], 0), w)          on vacated units
+  incurred(t) = min(max(w - max(rem[t], 0), 0), w)  on newly occupied units
+  gain(delta) = sum released - sum incurred ;  illegal shifts -> -BIG.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TASK_TILE = 256
+W = 128          # lane-aligned window length; supports mu <= 42
+NEG = -1e30
+
+
+def _kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref, hi_ref,
+            out_ref):
+    pad = mu
+    win_s = win_s_ref[...]                      # (TASK_TILE, W)
+    win_e = win_e_ref[...]
+    w = w_ref[...]                              # (TASK_TILE, 1)
+    dur = dur_ref[...]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, W), 1)
+
+    released_s = jnp.minimum(jnp.maximum(-win_s, 0.0), w)
+    released_e = jnp.minimum(jnp.maximum(-win_e, 0.0), w)
+    incurred_s = jnp.minimum(jnp.maximum(w - jnp.maximum(win_s, 0.0), 0.0), w)
+    incurred_e = jnp.minimum(jnp.maximum(w - jnp.maximum(win_e, 0.0), 0.0), w)
+
+    cols = []
+    for d in range(2 * mu + 1):
+        delta = d - mu
+        ln = jnp.minimum(jnp.float32(abs(delta)), dur)   # (TASK_TILE, 1)
+        if delta > 0:
+            # vacated: times [s, s+ln)         -> win_s j in [pad, pad+ln)
+            vac = (j >= pad) & (j < pad + ln)
+            rel = jnp.sum(jnp.where(vac, released_s, 0.0), axis=1,
+                          keepdims=True)
+            # occupied: times [e+delta-ln, e+delta) -> win_e j
+            occ = (j >= pad + delta - ln) & (j < pad + delta)
+            inc = jnp.sum(jnp.where(occ, incurred_e, 0.0), axis=1,
+                          keepdims=True)
+        elif delta < 0:
+            # vacated: times [e-ln, e)         -> win_e j in [pad-ln, pad)
+            vac = (j >= pad - ln) & (j < pad)
+            rel = jnp.sum(jnp.where(vac, released_e, 0.0), axis=1,
+                          keepdims=True)
+            # occupied: times [s+delta, s+delta+ln) -> win_s j
+            occ = (j >= pad + delta) & (j < pad + delta + ln)
+            inc = jnp.sum(jnp.where(occ, incurred_s, 0.0), axis=1,
+                          keepdims=True)
+        else:
+            rel = jnp.zeros_like(w)
+            inc = jnp.zeros_like(w)
+        gain = rel - inc
+        legal = (lo <= delta) & (delta <= hi) & (delta != 0) & (w > 0)
+        cols.append(jnp.where(legal, gain, NEG))
+    block = jnp.concatenate(cols, axis=1)        # (TASK_TILE, 2*mu+1)
+    d_out = out_ref.shape[1]
+    out_ref[...] = jnp.pad(block, ((0, 0), (0, d_out - block.shape[1])),
+                           constant_values=NEG)
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "interpret"))
+def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
+              interpret: bool = True):
+    """All-pairs (task, shift) gains.
+
+    Args:
+      rem:  f32[T] remaining-budget timeline (g_eff - active work power).
+      start, dur, work: f32[N].
+      lo, hi: f32[N] legal *absolute* start-time bounds per task.
+      mu: max shift.
+    Returns:
+      f32[N, 2*mu+1]; entry (i, d) = gain of moving task i by (d - mu);
+      illegal moves = -1e30.
+    """
+    assert mu <= (W // 2) - 22, f"mu={mu} too large for W={W}"
+    (n,) = start.shape
+    n_pad = -n % TASK_TILE
+    t_total = rem.shape[0]
+
+    # lane-aligned windows around start and end (wrapper-side gather)
+    rem_pad = jnp.pad(rem, (W, W))
+    idx = jnp.arange(W)[None, :] - mu
+    s_i = start.astype(jnp.int32)
+    e_i = (start + dur).astype(jnp.int32)
+    win_s = rem_pad[jnp.clip(s_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
+    win_e = rem_pad[jnp.clip(e_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
+
+    def pad2(x, v=0.0):
+        return jnp.pad(x, ((0, n_pad), (0, 0)), constant_values=v)
+
+    win_s = pad2(win_s)
+    win_e = pad2(win_e)
+    w2 = pad2(work[:, None])
+    dur2 = pad2(dur[:, None])
+    # relative legal shift bounds
+    lo2 = pad2((lo - start)[:, None], v=1.0)    # lo > hi on padding => illegal
+    hi2 = pad2((hi - start)[:, None], v=-1.0)
+
+    n_tiles = (n + n_pad) // TASK_TILE
+    d_out = W                                    # lane-aligned output block
+    out = pl.pallas_call(
+        functools.partial(_kernel, mu),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TASK_TILE, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d_out), jnp.float32),
+        interpret=interpret,
+    )(win_s, win_e, w2, dur2, lo2, hi2)
+    return out[:n, :2 * mu + 1]

@@ -1,0 +1,30 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container (TPU is the lowering
+TARGET); on a real TPU runtime pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.carbon_cost import deficit_timeline
+from repro.kernels.gain_scan import gain_scan
+
+
+def carbon_cost(starts, durs, works, g_eff, *, interpret: bool = True):
+    """Total carbon cost of a schedule (scalar f32)."""
+    starts = jnp.asarray(starts, jnp.float32)
+    ends = starts + jnp.asarray(durs, jnp.float32)
+    return deficit_timeline(
+        starts, ends, jnp.asarray(works, jnp.float32),
+        jnp.asarray(g_eff, jnp.float32), interpret=interpret).sum()
+
+
+def ls_gains(rem, start, dur, work, lo, hi, *, mu: int = 10,
+             interpret: bool = True):
+    """Local-search gain matrix f32[N, 2*mu+1] (illegal moves = -1e30)."""
+    return gain_scan(
+        jnp.asarray(rem, jnp.float32), jnp.asarray(start, jnp.float32),
+        jnp.asarray(dur, jnp.float32), jnp.asarray(work, jnp.float32),
+        jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
+        mu=mu, interpret=interpret)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (same shapes & semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def deficit_timeline_ref(starts, ends, works, g_eff):
+    """O(N*T) dense oracle for kernels.carbon_cost.deficit_timeline."""
+    T = g_eff.shape[0]
+    t = jnp.arange(T, dtype=jnp.float32)[None, :]
+    active = ((starts[:, None] <= t) & (t < ends[:, None])).astype(jnp.float32)
+    power = (works[:, None] * active).sum(axis=0)
+    return jnp.maximum(power - g_eff, 0.0)
+
+
+def gain_scan_ref(rem, start, dur, work, lo, hi, *, mu: int = 10):
+    """Oracle for kernels.gain_scan.gain_scan, vectorized over (task, shift).
+
+    Uses the direct definition: total deficit of the timeline after the move
+    minus before, evaluated only on the +-mu neighbourhood (identical to the
+    kernel's symmetric-difference form).
+    """
+    T = rem.shape[0]
+    t = jnp.arange(T, dtype=jnp.float32)
+
+    def one(s, d, w, l, h):
+        old = ((s <= t) & (t < s + d)).astype(jnp.float32)
+        base = rem + w * old          # timeline without the task
+
+        def for_delta(delta):
+            ns = s + delta
+            new = ((ns <= t) & (t < ns + d)).astype(jnp.float32)
+            before = jnp.maximum(-(base - w * old), 0.0).sum()
+            after = jnp.maximum(-(base - w * new), 0.0).sum()
+            legal = (l <= ns) & (ns <= h) & (delta != 0) & (w > 0)
+            return jnp.where(legal, before - after, -1e30)
+
+        deltas = jnp.arange(-mu, mu + 1, dtype=jnp.float32)
+        return jax.vmap(for_delta)(deltas)
+
+    return jax.vmap(one)(start, dur, work, lo, hi)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Dense-softmax oracle for kernels.flash_attention."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * hd ** -0.5
+    if causal:
+        m = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(m[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

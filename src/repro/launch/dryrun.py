@@ -1,0 +1,411 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Two modes per cell:
+  * compile — full-depth model (scan over layers), production mesh,
+    ``.lower().compile()`` must succeed; records memory_analysis() and the
+    collective schedule (post-SPMD HLO).
+  * cost    — roofline terms. XLA cost_analysis counts scan bodies once, so
+    we lower small UNROLLED depth variants (L in {1,2}; jamba {8,16} = 1-2
+    groups; whisper {(1,1),(2,1),(1,2)}) and fit the exact linear-in-depth
+    cost model total(L) = a + b*L, then evaluate at the true depth
+    (everything — fwd/bwd, optimizer, collectives — is linear in L).
+
+Usage: python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k \
+         --mesh single --mode both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.launch.mesh import batch_axes, data_size, make_production_mesh
+from repro.models import build_model, input_specs, model_flops
+from repro.models import unroll as unroll_mod
+from repro.models import xlstm as xlstm_mod
+from repro.roofline.analysis import HW, collective_bytes, roofline_terms
+from repro.sharding.ctx import configure
+from repro.sharding.specs import batch_specs, cache_specs, tree_param_specs
+from repro.train.optimizer import adamw_init
+from repro.train.step import make_train_step
+
+MICROBATCHES = {
+    "arctic-480b": 16, "granite-34b": 8, "jamba-v0.1-52b": 8,
+    "qwen2-vl-7b": 8, "qwen2.5-3b": 4, "whisper-large-v3": 4,
+}
+
+COST_CHUNK = 512        # bigger chunks for unrolled cost lowerings
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _depth_points(cfg):
+    if cfg.family == "hybrid":
+        return [cfg.attn_every, 2 * cfg.attn_every]
+    if cfg.family == "audio":
+        return [(1, 1), (2, 1), (1, 2)]
+    if cfg.family == "ssm":
+        return None                      # python-unrolled: exact as-is
+    return [1, 2]
+
+
+def _with_depth(cfg, pt, seq=4096):
+    if cfg.family == "audio":
+        e, d = pt
+        return dataclasses.replace(cfg, encoder_layers=e, num_layers=d)
+    kw = {"num_layers": pt}
+    if cfg.family == "hybrid" and cfg.mamba is not None:
+        # keep the unrolled chunk count at ~8 regardless of sequence length
+        kw["mamba"] = dataclasses.replace(
+            cfg.mamba, chunk=max(seq // 8, COST_CHUNK))
+    if cfg.slstm_layers:
+        kw["slstm_layers"] = tuple(i for i in cfg.slstm_layers if i < pt)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _state_struct_and_specs(model, mesh, fsdp=True, mp=False):
+    tp = mesh.shape["model"]
+    dsize = data_size(mesh)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = tree_param_specs(params, tp, dsize, fsdp=fsdp)
+    opt = jax.eval_shape(lambda p: adamw_init(p, mixed_precision=mp), params)
+    o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+    if mp:
+        o_specs["master"] = p_specs
+        params = jax.tree.map(
+            lambda st: jax.ShapeDtypeStruct(st.shape, jnp.bfloat16), params)
+    state = {"params": params, "opt": opt}
+    specs = {"params": p_specs, "opt": o_specs}
+    return state, specs
+
+
+def _batch_struct_and_specs(cfg, shape, mesh):
+    batch = input_specs(cfg, shape)
+    specs = batch_specs(batch_axes(mesh), cfg, shape)
+    return batch, specs
+
+
+def _extract(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return flops, byts, coll
+
+
+def _memory(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        out = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        return out
+    except Exception as e:          # CPU backend may not support it
+        return {"error": str(e)}
+
+
+# ---------------------------------------------------------------------------
+# lowering builders
+# ---------------------------------------------------------------------------
+
+def lower_train(cfg, shape, mesh, mb, *, with_opt=True, fsdp=True,
+                mp=False):
+    model = build_model(cfg, tp=mesh.shape["model"])
+    configure(mesh)
+    state, s_specs = _state_struct_and_specs(model, mesh, fsdp=fsdp, mp=mp)
+    batch, b_specs = _batch_struct_and_specs(cfg, shape, mesh)
+    if with_opt:
+        step = make_train_step(model, microbatches=mb)
+        in_sh = (_ns(mesh, s_specs), _ns(mesh, b_specs))
+        out_sh = (_ns(mesh, s_specs),
+                  _ns(mesh, {"loss": P(), "gnorm": P(), "lr": P()}))
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        return fn.lower(state, batch)
+
+    def fwdbwd(params, b):
+        return jax.value_and_grad(model.loss)(params, b)
+
+    in_sh = (_ns(mesh, s_specs["params"]), _ns(mesh, b_specs))
+    out_sh = (NamedSharding(mesh, P()), _ns(mesh, s_specs["params"]))
+    fn = jax.jit(fwdbwd, in_shardings=in_sh, out_shardings=out_sh)
+    return fn.lower(state["params"], batch)
+
+
+def lower_prefill(cfg, shape, mesh, fsdp=True):
+    model = build_model(cfg, tp=mesh.shape["model"])
+    configure(mesh)
+    state, s_specs = _state_struct_and_specs(model, mesh, fsdp=fsdp)
+    batch, b_specs = _batch_struct_and_specs(cfg, shape, mesh)
+
+    if cfg.family == "audio":
+        def prefill(params, b):
+            enc = model.encode(params, b["enc_embeds"], remat=False)
+            xk, xv = model._cross_kv(params, enc)
+            return enc[:, -1], xk, xv
+        out_sh = None
+    else:
+        def prefill(params, b):
+            h = model.apply(params, b, remat=False)
+            from repro.models import layers as L
+            logits = L.unembed(h[:, -1:], params["embed"])
+            return logits[:, 0]
+        out_sh = None
+
+    in_sh = (_ns(mesh, s_specs["params"]), _ns(mesh, b_specs))
+    fn = jax.jit(prefill, in_shardings=in_sh)
+    return fn.lower(state["params"], batch)
+
+
+def lower_decode(cfg, shape, mesh, fsdp=True):
+    model = build_model(cfg, tp=mesh.shape["model"])
+    configure(mesh)
+    state, s_specs = _state_struct_and_specs(model, mesh, fsdp=fsdp)
+    din = input_specs(cfg, shape, model=model)
+    tp = mesh.shape["model"]
+    kv_shardable = (model.hkv % tp == 0) if hasattr(model, "hkv") else False
+    c_specs = cache_specs(batch_axes(mesh), cfg, shape.batch,
+                          kv_shardable, data_size(mesh))
+    ba = batch_axes(mesh) if shape.batch >= data_size(mesh) else None
+    tok_spec = P(ba) if ba else P()
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    v_ax = "model" if cfg.vocab % tp == 0 else None
+    in_sh = (_ns(mesh, s_specs["params"]), _ns(mesh, c_specs),
+             NamedSharding(mesh, tok_spec))
+    out_sh = (NamedSharding(mesh, P(ba, v_ax) if ba else P(None, v_ax)),
+              _ns(mesh, c_specs))
+    fn = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh)
+    return fn.lower(state["params"], din["cache"], din["tokens"])
+
+
+def _lower_for(cfg, shape, mesh, mb, kind, **kw):
+    if shape.kind == "train":
+        return lower_train(cfg, shape, mesh, mb, **kw)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh,
+                             **{k: v for k, v in kw.items() if k == "fsdp"})
+    return lower_decode(cfg, shape, mesh,
+                        **{k: v for k, v in kw.items() if k == "fsdp"})
+
+
+# ---------------------------------------------------------------------------
+# cost calibration
+# ---------------------------------------------------------------------------
+
+def _slstm_correction(cfg, shape) -> float:
+    """Analytic FLOPs for the sequential sLSTM recurrence (scan-hidden)."""
+    if cfg.family != "ssm" or not cfg.slstm_layers:
+        return 0.0
+    H, hd = cfg.num_heads, cfg.head_dim
+    n = len(cfg.slstm_layers)
+    steps = shape.seq if shape.kind != "decode" else 1
+    per_tok = 4 * H * hd * hd * 2              # recurrent matmuls
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return n * shape.batch * steps * per_tok * mult
+
+
+def cost_cell(cfg, shape, mesh, mb, fsdp=True, mp=False):
+    """Calibrated whole-step cost: flops, bytes, collective bytes/chip."""
+    unroll_mod.set_unroll(True)
+    old_chunk = xlstm_mod.CHUNK
+    xlstm_mod.CHUNK = COST_CHUNK
+    try:
+        pts = _depth_points(cfg)
+        is_train = shape.kind == "train"
+        # per-microbatch shape for train cost lowering
+        if is_train and mb > 1:
+            shape_mb = dataclasses.replace(shape, batch=shape.batch // mb)
+        else:
+            shape_mb = shape
+
+        if pts is None:     # xlstm: exact (python-unrolled everywhere)
+            if is_train:
+                lw_f = lower_train(cfg, shape_mb, mesh, 1, with_opt=False,
+                                   fsdp=fsdp, mp=mp)
+                lw_s = lower_train(cfg, shape_mb, mesh, 1, with_opt=True,
+                                   fsdp=fsdp, mp=mp)
+                f1, b1, c1 = _extract(lw_f.compile())
+                f2, b2, c2 = _extract(lw_s.compile())
+                flops = mb * f1 + (f2 - f1)
+                byts = mb * b1 + (b2 - b1)
+                coll = mb * c1["total"] + (c2["total"] - c1["total"])
+            else:
+                f, b, c = _extract(
+                    _lower_for(cfg, shape_mb, mesh, 1, shape.kind).compile())
+                flops, byts, coll = f, b, c["total"]
+            flops += _slstm_correction(cfg, shape)
+            return flops, byts, coll
+
+        def measure(depth, with_opt):
+            c2 = _with_depth(cfg, depth, seq=shape_mb.seq)
+            if is_train:
+                lw = lower_train(c2, shape_mb, mesh, 1, with_opt=with_opt,
+                                 fsdp=fsdp, mp=mp)
+            else:
+                lw = _lower_for(c2, shape_mb, mesh, 1, shape.kind, fsdp=fsdp)
+            f, b, c = _extract(lw.compile())
+            return np.asarray([f, b, c["total"]], dtype=np.float64)
+
+        if cfg.family == "audio":
+            # total(e, d) = a + be*e + bd*d, exact from three points
+            Le, Ld = cfg.encoder_layers, cfg.num_layers
+
+            def solve3(m11, m21, m12):
+                be = m21 - m11
+                bd = m12 - m11
+                a = m11 - be - bd
+                return a + be * Le + bd * Ld
+
+            m11, m21, m12 = (measure(p, False)
+                             for p in ((1, 1), (2, 1), (1, 2)))
+            fb = solve3(m11, m21, m12)
+            if is_train:
+                s11, s21, s12 = (measure(p, True)
+                                 for p in ((1, 1), (2, 1), (1, 2)))
+                opt = solve3(s11 - m11, s21 - m21, s12 - m12)
+                fb = mb * fb + opt
+            return tuple(float(x) for x in fb)
+
+        # total(L) = a + b*L, exact from two points
+        g1, g2 = pts
+        if cfg.family == "hybrid":
+            l1, l2 = 1, 2                       # depth unit = groups
+            Ltrue = cfg.num_layers // cfg.attn_every
+        else:
+            l1, l2 = g1, g2
+            Ltrue = cfg.num_layers
+
+        def solve2(vA, vB):
+            b = (vB - vA) / (l2 - l1)
+            a = vA - b * l1
+            return a + b * Ltrue
+
+        mA, mB = measure(g1, False), measure(g2, False)
+        fb = solve2(mA, mB)
+        if is_train:
+            sA, sB = measure(g1, True), measure(g2, True)
+            fb = mb * fb + solve2(sA - mA, sB - mB)
+        return tuple(float(x) for x in fb)
+    finally:
+        unroll_mod.set_unroll(False)
+        xlstm_mod.CHUNK = old_chunk
+
+
+# ---------------------------------------------------------------------------
+# cell driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
+             out_dir: str, fsdp: bool = True, mp: bool = False,
+             moe_dispatch: str = "global", tag: str = "") -> dict:
+    cfg = ARCHS[arch]
+    if moe_dispatch != "global" and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=moe_dispatch))
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "mode": mode, "fsdp": fsdp, "mp": mp,
+                 "moe_dispatch": moe_dispatch, "tag": tag}
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = reason
+        _save(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    mb = MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1
+    rec["chips"] = chips
+    rec["microbatches"] = mb
+
+    if mode in ("compile", "both"):
+        t0 = time.time()
+        kw = {"fsdp": fsdp, "mp": mp} if shape.kind == "train" else              {"fsdp": fsdp}
+        lowered = _lower_for(cfg, shape, mesh, mb, shape.kind, **kw)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = _memory(compiled)
+        f, b, c = _extract(compiled)
+        rec["hlo_once"] = {"flops": f, "bytes": b, "collectives": c}
+
+    if mode in ("cost", "both") and mesh_kind == "single":
+        t0 = time.time()
+        flops_dev, bytes_dev, coll = cost_cell(cfg, shape, mesh, mb,
+                                               fsdp=fsdp, mp=mp)
+        rec["cost_s"] = round(time.time() - t0, 1)
+        model = build_model(cfg, tp=mesh.shape["model"])
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        mf = model_flops(cfg, params, shape)
+        # cost_analysis reports the per-device (post-SPMD) program
+        flops = flops_dev * chips
+        byts = bytes_dev * chips
+        rec["cost"] = {
+            "hlo_flops": flops, "hlo_bytes": byts,
+            "hlo_flops_per_chip": flops_dev,
+            "collective_bytes_per_chip": coll,
+            "model_flops": mf,
+            "useful_ratio": mf / flops if flops else 0.0,
+        }
+        rec["roofline"] = roofline_terms(flops, byts, coll, chips)
+
+    _save(rec, out_dir)
+    return rec
+
+
+def _save(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+    if not rec.get("fsdp", True):
+        name += "_nofsdp"
+    if rec.get("tag"):
+        name += "_" + rec["tag"]
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--mode", default="both",
+                    choices=["compile", "cost", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--mp", action="store_true",
+                    help="bf16 live params + f32 master (halves gathers)")
+    ap.add_argument("--moe-dispatch", default="global",
+                    choices=["global", "sharded", "shardmap"])
+    ap.add_argument("--tag", default="", help="output filename suffix")
+    args = ap.parse_args()
+    rec = run_cell(args.arch, args.shape, args.mesh, args.mode, args.out,
+                   fsdp=not args.no_fsdp, mp=args.mp,
+                   moe_dispatch=args.moe_dispatch, tag=args.tag)
+    print(json.dumps(rec, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

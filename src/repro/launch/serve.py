@@ -1,0 +1,57 @@
+"""Serving driver: continuous batching over the decode step.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --reduced --requests 16 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model, param_count
+from repro.serve import ContinuousBatcher, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=512)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32")
+    model = build_model(cfg, tp=16)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {param_count(params) / 1e6:.2f}M params")
+
+    batcher = ContinuousBatcher(model, params, batch_size=args.slots,
+                                max_len=args.max_len, eos=0)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        batcher.submit(Request(
+            rid=rid,
+            prompt=rng.integers(1, cfg.vocab, rng.integers(2, 8)).tolist(),
+            max_tokens=args.max_new))
+    t0 = time.time()
+    steps = 0
+    while batcher.queue or any(r is not None and not r.done
+                               for r in batcher.slots):
+        batcher.step()
+        steps += 1
+    dt = time.time() - t0
+    print(f"{args.requests} requests, {steps} decode steps, {dt:.1f}s "
+          f"({steps * args.slots / max(dt, 1e-9):.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

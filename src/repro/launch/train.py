@@ -1,0 +1,104 @@
+"""Production train driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --batch 8 --seq 256 [--reduced] [--mesh none|single|multi] \
+        [--carbon-gate] [--mp] [--ckpt-dir DIR]
+
+On real hardware the mesh flags select the production meshes of
+launch/mesh.py; on this CPU container use ``--mesh none`` (default) with
+``--reduced`` configs. The driver wires: config -> model -> sharded train
+step -> deterministic data -> checkpoint manager -> (optional) CarbonGate.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import generate_profile
+from repro.data import SyntheticTokens
+from repro.launch.mesh import batch_axes, data_size, make_production_mesh
+from repro.models import build_model, param_count
+from repro.runtime.carbon_gate import CarbonGate, fleet_platform
+from repro.sharding.ctx import configure
+from repro.train.step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    ap.add_argument("--mp", action="store_true")
+    ap.add_argument("--carbon-gate", action="store_true")
+    ap.add_argument("--gate-chunk", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32")
+    tp = 16
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        configure(mesh)
+        tp = mesh.shape["model"]
+    model = build_model(cfg, tp=tp)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    data = SyntheticTokens(cfg, shape, seed=0)
+    step_fn = jax.jit(make_train_step(model, microbatches=args.microbatches,
+                                      warmup=min(50, args.steps // 5 + 1)))
+    mgr = CheckpointManager(args.ckpt_dir, keep=3, every=args.ckpt_every,
+                            async_save=True)
+
+    state, start = mgr.restore_latest()
+    if state is None:
+        state = init_state(model, jax.random.PRNGKey(0),
+                           mixed_precision=args.mp)
+        start = -1
+    print(f"{cfg.name}: {param_count(state['params']) / 1e6:.1f}M params, "
+          f"resuming at step {start + 1}")
+
+    gate = None
+    if args.carbon_gate:
+        plat = fleet_platform(1, 100, 250, chips_per_pod=256)
+        horizon = 3 * args.steps
+        prof = generate_profile("S1", horizon, plat, J=24, seed=7,
+                                work_capacity=int(plat.p_work[0]))
+        gate = CarbonGate(prof, plat)
+        n_chunks = -(-args.steps // args.gate_chunk)
+        plan = gate.make_plan([[args.gate_chunk] * n_chunks])
+        print(f"carbon plan cost {plan.cost} vs ASAP {plan.asap_cost}")
+
+    clock = 0.0
+    t0 = time.time()
+    for s in range(start + 1, args.steps):
+        if gate is not None and s % args.gate_chunk == 0:
+            wait = gate.wait_time(0, s // args.gate_chunk, clock)
+            clock += wait
+        state, metrics = step_fn(state, data.batch(s))
+        clock += 1.0
+        if s % args.log_every == 0:
+            print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['gnorm']):.3f} "
+                  f"wall {time.time() - t0:.1f}s")
+        mgr.maybe_save(state, s)
+    mgr.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

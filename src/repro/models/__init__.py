@@ -1,0 +1,6 @@
+from repro.models.model_zoo import (  # noqa: F401
+    build_model,
+    input_specs,
+    model_flops,
+    param_count,
+)

@@ -1,0 +1,234 @@
+"""Shared model layers: RMSNorm, RoPE / M-RoPE, GQA attention, SwiGLU MLP.
+
+Pure functions over explicit parameter pytrees (stacked along a leading
+layer axis for ``lax.scan`` over layers). Attention is query-chunked so the
+per-layer score buffer stays ~O(QCHUNK * S) — the TPU-friendly form (exact,
+no approximation); decode reads a KV cache in one step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import unroll
+from repro.sharding.ctx import shard
+
+QCHUNK = 512
+
+
+def dtype_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_cos_sin(pos, head_dim, theta):
+    """pos [...]: returns cos/sin of shape [..., head_dim//2], f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) / half))
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, pos, theta):
+    """x [B,S,H,hd], pos [B,S] -> rotated x (rotate-half convention)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_cos_sin(pos, hd, theta)      # [B,S,hd/2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, pos3, theta, sections):
+    """Qwen2-VL M-RoPE: pos3 [3,B,S] (t/h/w); sections sum to head_dim//2."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    cs = [_rope_cos_sin(pos3[i], hd, theta) for i in range(3)]
+    # per-frequency-band section selection
+    parts_cos, parts_sin = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts_cos.append(cs[i][0][..., off:off + sec])
+        parts_sin.append(cs[i][1][..., off:off + sec])
+        off += sec
+    cos = jnp.concatenate(parts_cos, axis=-1)[:, :, None, :]
+    sin = jnp.concatenate(parts_sin, axis=-1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, layers, hq_pad, hkv_pad):
+    """Stacked attention params; head counts padded per the TP head plan."""
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": normal(ks[0], (layers, d, hq_pad, hd), sc),
+        "wk": normal(ks[1], (layers, d, hkv_pad, hd), sc),
+        "wv": normal(ks[2], (layers, d, hkv_pad, hd), sc),
+        "wo": normal(ks[3], (layers, hq_pad, hd, d),
+                     (hq_pad * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((layers, hq_pad, hd))
+        p["bk"] = jnp.zeros((layers, hkv_pad, hd))
+        p["bv"] = jnp.zeros((layers, hkv_pad, hd))
+    return p
+
+
+def _qkv(p, x, cfg):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _gqa_scores_out(q, k, v, causal, q_offset=0, kv_len_mask=None):
+    """Exact attention for one query chunk.
+
+    q [B,Sq,Hq,hd]; k/v [B,Sk,Hkv,hd] with Hkv | Hq — kv heads are expanded
+    (broadcast) to Hq so the head axis shards cleanly over TP; XLA fuses the
+    repeat into the contraction.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    if Hkv != Hq:
+        k = jnp.repeat(k, Hq // Hkv, axis=2)
+        v = jnp.repeat(v, Hq // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    s = s * (hd ** -0.5)
+    Sk = k.shape[1]
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -1e30)
+    if kv_len_mask is not None:                    # decode: mask cache tail
+        s = jnp.where(kv_len_mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)
+
+
+def attention_train(p, x, cfg, pos, causal=True, kv_override=None):
+    """Query-chunked exact attention. pos: [B,S] or [3,B,S] or None."""
+    q, k, v = _qkv(p, x, cfg)
+    if kv_override is not None:                    # cross-attention
+        k, v = kv_override
+    if cfg.rope == "mrope" and pos is not None:
+        q = apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope == "std" and pos is not None:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = shard(q, "batch", None, "tp", None)
+    B, S = x.shape[0], x.shape[1]
+    chunk = min(QCHUNK, S)
+    n_chunks = S // chunk if S % chunk == 0 else -(-S // chunk)
+
+    if n_chunks <= 1:
+        o = _gqa_scores_out(q, k, v, causal)
+    elif unroll.UNROLL:
+        o = jnp.concatenate(
+            [_gqa_scores_out(q[:, i * chunk:(i + 1) * chunk], k, v, causal,
+                             q_offset=i * chunk)
+             for i in range(n_chunks)], axis=1)
+    else:
+        def body(i, acc):
+            qs = lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+            oc = _gqa_scores_out(qs, k, v, causal, q_offset=i * chunk)
+            return lax.dynamic_update_slice_in_dim(acc, oc, i * chunk, axis=1)
+        o = lax.fori_loop(0, n_chunks, body, jnp.zeros_like(q))
+    o = shard(o, "batch", None, "tp", None)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def attention_decode(p, x, cfg, pos, cache_k, cache_v, cache_len):
+    """One-token decode. x [B,1,d]; cache_k/v [B,Smax,Hkv,hd]; pos [B]."""
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope == "mrope":
+        pos3 = jnp.broadcast_to(pos[None, :, None], (3,) + pos.shape + (1,))
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope == "std":
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    B = x.shape[0]
+    # write new kv at position `pos` (same for all batch rows in this step)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                              cache_len, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                              cache_len, axis=1)
+    # pin the cache layout: without this, head-axis sharding propagates from
+    # the TP'd query path into the cache and XLA all-gathers the WHOLE cache
+    # (observed: 2 x 17 GB f32 gathers per decode step on smollm decode_32k)
+    cache_k = shard(cache_k, "batch", None, "kv_tp", None)
+    cache_v = shard(cache_v, "batch", None, "kv_tp", None)
+    Smax = cache_k.shape[1]
+    valid = jnp.arange(Smax)[None, :] <= cache_len      # [1, Smax]
+    valid = jnp.broadcast_to(valid, (B, Smax))
+    o = _gqa_scores_out(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                        causal=False, kv_len_mask=valid)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, ff, layers):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": normal(ks[0], (layers, d, ff), d ** -0.5),
+        "w3": normal(ks[1], (layers, d, ff), d ** -0.5),
+        "w2": normal(ks[2], (layers, ff, d), ff ** -0.5),
+    }
+
+
+def mlp(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt)))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(dt))
+    h = shard(h, "batch", None, "tp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt))
+
+
+def unembed(x, embed, lm_head=None):
+    dt = x.dtype
+    if lm_head is None:
+        return jnp.einsum("bsd,vd->bsv", x, embed.astype(dt))
+    return jnp.einsum("bsd,dv->bsv", x, lm_head.astype(dt))
+
+
+def softmax_xent(logits, labels, vocab):
+    """Cross-entropy with vocab-sharded logits (f32 reductions)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()

@@ -1,0 +1,134 @@
+"""Mamba-1 selective SSM block (Jamba's mixer), chunked for TPU.
+
+Training runs a ``lax.scan`` over sequence chunks carrying the SSM state;
+within a chunk the linear recurrence h_t = dA_t * h_{t-1} + dBx_t is solved
+with an associative scan (log-depth, parallel — the TPU-native adaptation of
+the CUDA selective-scan kernel). Decode is the O(1) recurrent step.
+
+d_inner shards over TP (all ops are elementwise or contract d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import normal
+from repro.models.unroll import scan_or_unroll
+from repro.sharding.ctx import shard
+
+
+def init_mamba(key, d, mcfg, layers):
+    di = mcfg.expand * d
+    dtr = max(d // 16, 1)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": normal(ks[0], (layers, d, 2 * di), d ** -0.5),
+        "conv_w": normal(ks[1], (layers, mcfg.d_conv, di), 0.2),
+        "conv_b": jnp.zeros((layers, di)),
+        "x_proj": normal(ks[2], (layers, di, dtr + 2 * mcfg.d_state), di ** -0.5),
+        "dt_proj": normal(ks[3], (layers, dtr, di), dtr ** -0.5),
+        "dt_bias": jnp.zeros((layers, di)),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mcfg.d_state + 1, dtype=jnp.float32),
+            (layers, di, mcfg.d_state))),
+        "D": jnp.ones((layers, di)),
+        "out_proj": normal(ks[4], (layers, di, d), di ** -0.5),
+    }
+
+
+def _ssm_inputs(p, x, mcfg):
+    """Shared pre-SSM computation. x [B,S,d] -> (u, z, dt, B_, C_, A)."""
+    dt_ = x.dtype
+    di = p["conv_w"].shape[-1]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    u, z = jnp.split(xz, 2, axis=-1)                        # [B,S,di]
+    u = shard(u, "batch", None, "tp")
+    return u, z, di
+
+
+def _conv_silu(p, u, mcfg, conv_state=None):
+    """Causal depthwise conv (kernel d_conv) + SiLU; returns (u, new_state)."""
+    K = mcfg.d_conv
+    if conv_state is None:
+        pad = jnp.zeros(u.shape[:1] + (K - 1,) + u.shape[2:], u.dtype)
+        full = jnp.concatenate([pad, u], axis=1)
+    else:
+        full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+              for i in range(K))
+    out = out + p["conv_b"].astype(u.dtype)
+    new_state = full[:, -(K - 1):] if K > 1 else full[:, :0]
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_params(p, u, mcfg):
+    """dt [B,S,di] f32, Bc/Cc [B,S,ds] f32, A [di,ds] f32."""
+    dtr = p["dt_proj"].shape[-2]
+    ds = mcfg.d_state
+    dbc = jnp.einsum("bsi,ir->bsr", u, p["x_proj"].astype(u.dtype))
+    dt_raw, Bc, Cc = jnp.split(dbc.astype(jnp.float32), [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"])
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                # [di,ds]
+    return dt, Bc, Cc, A
+
+
+def mamba_train(p, x, mcfg):
+    """Full-sequence forward. x [B,S,d] -> [B,S,d]."""
+    u, z, di = _ssm_inputs(p, x, mcfg)
+    u, _ = _conv_silu(p, u, mcfg)
+    dt, Bc, Cc, A = _ssm_params(p, u, mcfg)
+    B_, S, _ = u.shape
+    ds = mcfg.d_state
+    ch = min(mcfg.chunk, S)
+    nc = S // ch
+    assert S % ch == 0, (S, ch)
+
+    dA = jnp.exp(dt[..., None] * A)                          # [B,S,di,ds]
+    dBx = (dt * u.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    def chunk_body(h, args):
+        dA_c, dBx_c, Cc_c = args                             # [B,ch,di,ds]...
+        # prefix recurrence inside the chunk (associative, log-depth)
+        def comb(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+        pA, pB = lax.associative_scan(comb, (dA_c, dBx_c), axis=1)
+        hs = pA * h[:, None] + pB                            # [B,ch,di,ds]
+        y = jnp.einsum("bcis,bcs->bci", hs, Cc_c)
+        return hs[:, -1], y
+
+    dA_r = dA.reshape(B_, nc, ch, di, ds).swapaxes(0, 1)
+    dBx_r = dBx.reshape(B_, nc, ch, di, ds).swapaxes(0, 1)
+    Cc_r = Cc.reshape(B_, nc, ch, ds).swapaxes(0, 1)
+    h0 = jnp.zeros((B_, di, ds), jnp.float32)
+    _, ys = scan_or_unroll(lax.scan, chunk_body, h0,
+                           (dA_r, dBx_r, Cc_r), nc)
+    y = ys.swapaxes(0, 1).reshape(B_, S, di)
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = shard(y, "batch", None, "tp")
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba_init_state(p, mcfg, batch, dtype=jnp.float32):
+    di = p["conv_w"].shape[-1]
+    return {
+        "conv": jnp.zeros((batch, mcfg.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, mcfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, mcfg, state):
+    """One-token step. x [B,1,d] -> ([B,1,d], new state)."""
+    u, z, di = _ssm_inputs(p, x, mcfg)
+    u, conv_state = _conv_silu(p, u, mcfg, conv_state=state["conv"])
+    dt, Bc, Cc, A = _ssm_params(p, u, mcfg)
+    dA = jnp.exp(dt[:, 0, :, None] * A)                      # [B,di,ds]
+    dBx = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] * Bc[:, 0, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bis,bs->bi", h, Cc[:, 0])[:, None, :]
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": conv_state.astype(state["conv"].dtype), "ssm": h}

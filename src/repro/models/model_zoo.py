@@ -1,0 +1,97 @@
+"""Model registry: build models, count params/FLOPs, make dry-run input specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import DecoderModel
+from repro.models.whisper import EncDecModel
+
+
+def build_model(cfg: ModelConfig, tp: int = 16):
+    if cfg.family == "audio":
+        return EncDecModel(cfg, tp=tp)
+    return DecoderModel(cfg, tp=tp)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: top_k of num_experts experts)."""
+    total = param_count(params)
+    if cfg.moe is None:
+        return total
+
+    def expert_size(tree):
+        return sum(int(x.size) for k, x in _walk(tree) if k in
+                   ("w1", "w2", "w3") and x.ndim >= 4)
+
+    # expert tensors have shape [..., E, d, ff]: active fraction = k/E
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    exp = 0
+    for key, x in _walk(params):
+        if x.ndim >= 4 and x.shape[-3] == e and key in ("w1", "w2", "w3"):
+            exp += int(x.size)
+    return total - exp + int(exp * k / e)
+
+
+def _walk(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, k)
+    else:
+        yield prefix, tree
+
+
+def model_flops(cfg: ModelConfig, params, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for the roofline ratio: 6*N*D (train) / 2*N*D (fwd-only),
+    with N = active params (MoE) and D = processed tokens."""
+    n_active = active_param_count(cfg, params)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    Returns (batch_pytree, kind). For decode shapes the pytree includes the
+    KV cache / recurrent state (the serve_step signature).
+    """
+    B, S = shape.batch, shape.seq
+    i32 = jnp.int32
+    f32 = jnp.float32
+    bf16 = jnp.bfloat16
+
+    def st(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            batch = {"embeds": st((B, S, cfg.d_model), bf16),
+                     "positions": st((3, B, S), i32),
+                     "labels": st((B, S), i32)}
+        elif cfg.family == "audio":
+            batch = {"enc_embeds": st((B, S, cfg.d_model), bf16),
+                     "dec_tokens": st((B, S), i32),
+                     "labels": st((B, S), i32)}
+        else:
+            batch = {"tokens": st((B, S), i32), "labels": st((B, S), i32)}
+        return batch
+
+    # decode: token batch + cache structs
+    assert model is not None
+    if cfg.family == "audio":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(B, S, enc_len=S))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"tokens": st((B,), i32), "cache": cache}

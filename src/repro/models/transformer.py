@@ -1,0 +1,377 @@
+"""Decoder-only stacks: dense / vlm / moe / hybrid (jamba) / ssm (xlstm).
+
+Homogeneous stacks scan over stacked layer params (O(1) compile time in
+depth, remat per layer); jamba scans over groups of (1 attention + 7 mamba)
+layers with the fixed intra-group FFN pattern unrolled; xlstm unrolls its 12
+blocks (2 sLSTM + 10 mLSTM).
+
+All forward paths share: embeddings (or stub frontend embeddings for vlm),
+RMSNorm, tied unembedding, f32 logits/loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+from repro.models.unroll import scan_or_unroll
+from repro.sharding.ctx import head_plan, shard
+
+
+def _layer_counts(cfg):
+    """Pattern bookkeeping for hybrid stacks."""
+    if cfg.family != "hybrid":
+        return None
+    g = cfg.attn_every
+    assert cfg.num_layers % g == 0
+    return cfg.num_layers // g
+
+
+class DecoderModel:
+    """Functional model wrapper: init / loss / prefill / decode."""
+
+    def __init__(self, cfg, tp: int = 16):
+        self.cfg = cfg
+        self.hq, self.hkv, self.shard_heads = head_plan(
+            cfg.num_heads, cfg.kv_heads, tp)
+
+    # -- params ------------------------------------------------------------
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 24))
+        p = {"embed": L.normal(next(ks), (cfg.vocab, cfg.d_model), 0.02),
+             "final_norm": jnp.ones(cfg.d_model)}
+        if cfg.family == "ssm":
+            p["blocks"] = self._init_xlstm(next(ks))
+            return p
+        if cfg.family == "hybrid":
+            p["groups"] = self._init_hybrid(next(ks))
+            return p
+        Ln = cfg.num_layers
+        p["ln1"] = jnp.ones((Ln, cfg.d_model))
+        p["ln2"] = jnp.ones((Ln, cfg.d_model))
+        p["attn"] = L.init_attn(next(ks), cfg, Ln, self.hq, self.hkv)
+        if cfg.d_ff:
+            p["mlp"] = L.init_mlp(next(ks), cfg.d_model, cfg.d_ff, Ln)
+        if cfg.moe is not None:
+            p["moe"] = MOE.init_moe(next(ks), cfg.d_model, cfg.moe, Ln)
+        return p
+
+    def _init_xlstm(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        n_s = len(cfg.slstm_layers)
+        n_m = cfg.num_layers - n_s
+        return {"mlstm": X.init_mlstm(k1, cfg, n_m),
+                "slstm": X.init_slstm(k2, cfg, n_s)}
+
+    def _init_hybrid(self, key):
+        cfg = self.cfg
+        G = _layer_counts(self.cfg)
+        per = cfg.attn_every               # layers per group
+        n_moe = per // 2
+        n_mlp = per - n_moe
+        ks = jax.random.split(key, 6)
+        return {
+            "ln1": jnp.ones((G, per, cfg.d_model)),
+            "ln2": jnp.ones((G, per, cfg.d_model)),
+            "attn": L.init_attn(ks[0], cfg, G, self.hq, self.hkv),
+            "mamba": M.init_mamba(ks[1], cfg.d_model, cfg.mamba,
+                                  G * (per - 1)),
+            "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, G * n_mlp),
+            "moe": MOE.init_moe(ks[3], cfg.d_model, cfg.moe, G * n_moe),
+        }
+
+    # -- shared blocks -------------------------------------------------------
+
+    def _ffn(self, pl, x, use_moe: bool):
+        cfg = self.cfg
+        if use_moe:
+            y = MOE.moe_ffn(pl["moe"], x, cfg.moe)
+            if cfg.moe.dense_residual and cfg.d_ff:
+                y = y + L.mlp(pl["mlp"], x)
+            return y
+        return L.mlp(pl["mlp"], x)
+
+    def _dense_block(self, pl, x, pos):
+        cfg = self.cfg
+        h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+        x = x + L.attention_train(
+            {k: pl[k] for k in ("wq", "wk", "wv", "wo", "bq", "bk", "bv")
+             if k in pl}, h, cfg, pos)
+        h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+        use_moe = cfg.moe is not None
+        x = x + self._ffn(pl, h, use_moe)
+        return shard(x, "batch", None, None)
+
+    # -- forward (train / prefill) ------------------------------------------
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        if "embeds" in batch:                       # vlm stub frontend
+            x = batch["embeds"].astype(dt)
+        else:
+            x = params["embed"][batch["tokens"]].astype(dt)
+        if cfg.rope == "mrope":
+            pos = batch["positions"]                 # [3,B,S]
+        else:
+            Bb, S = x.shape[0], x.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (Bb, S))
+        return shard(x, "batch", None, None), pos
+
+    def apply(self, params, batch, remat: bool = True):
+        """Full-sequence forward -> final hidden states [B,S,d]."""
+        cfg = self.cfg
+        x, pos = self._embed_inputs(params, batch)
+        if cfg.family in ("dense", "vlm", "moe"):
+            x = self._stack_scan(params, x, pos, remat)
+        elif cfg.family == "hybrid":
+            x = self._hybrid_scan(params, x, pos, remat)
+        elif cfg.family == "ssm":
+            x = self._xlstm_stack(params, x)
+        else:
+            raise ValueError(cfg.family)
+        return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+    def _stack_scan(self, params, x, pos, remat):
+        cfg = self.cfg
+        keys = [k for k in ("ln1", "ln2", "attn", "mlp", "moe")
+                if k in params]
+
+        def body(x, pl_flat):
+            pl = dict(pl_flat["attn"])
+            pl["ln1"], pl["ln2"] = pl_flat["ln1"], pl_flat["ln2"]
+            if "mlp" in pl_flat:
+                pl["mlp"] = pl_flat["mlp"]
+            if "moe" in pl_flat:
+                pl["moe"] = pl_flat["moe"]
+            return self._dense_block(pl, x, pos), None
+
+        stacked = {k: params[k] for k in keys}
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = scan_or_unroll(lax.scan, fn, x, stacked, cfg.num_layers)
+        return x
+
+    def _hybrid_scan(self, params, x, pos, remat):
+        cfg = self.cfg
+        per = cfg.attn_every
+        G = _layer_counts(cfg)
+        g = params["groups"]
+
+        mamba_g = jax.tree.map(
+            lambda a: a.reshape((G, per - 1) + a.shape[1:]), g["mamba"])
+        n_moe = per // 2
+        moe_g = jax.tree.map(
+            lambda a: a.reshape((G, n_moe) + a.shape[1:]), g["moe"])
+        mlp_g = jax.tree.map(
+            lambda a: a.reshape((G, per - n_moe) + a.shape[1:]), g["mlp"])
+
+        def group_body(x, gp):
+            i_mlp = 0
+            i_moe = 0
+            for j in range(per):
+                h = L.rmsnorm(x, gp["ln1"][j], cfg.norm_eps)
+                if j == 0:
+                    x = x + L.attention_train(gp["attn"], h, cfg, pos)
+                else:
+                    x = x + M.mamba_train(
+                        jax.tree.map(lambda a: a[j - 1], gp["mamba"]),
+                        h, cfg.mamba)
+                h = L.rmsnorm(x, gp["ln2"][j], cfg.norm_eps)
+                if j % 2 == 1:                      # global odd layer -> MoE
+                    pl = {"moe": jax.tree.map(lambda a: a[i_moe], gp["moe"])}
+                    x = x + self._ffn(pl, h, True)
+                    i_moe += 1
+                else:
+                    pl = jax.tree.map(lambda a: a[i_mlp], gp["mlp"])
+                    x = x + L.mlp(pl, h)
+                    i_mlp += 1
+                x = shard(x, "batch", None, None)
+            return x, None
+
+        stacked = {"ln1": g["ln1"], "ln2": g["ln2"], "attn": g["attn"],
+                   "mamba": mamba_g, "moe": moe_g, "mlp": mlp_g}
+        fn = jax.checkpoint(group_body) if remat else group_body
+        x, _ = scan_or_unroll(lax.scan, fn, x, stacked, G)
+        return x
+
+    def _xlstm_stack(self, params, x):
+        cfg = self.cfg
+        b = params["blocks"]
+        i_m = i_s = 0
+        for l in range(cfg.num_layers):
+            if l in cfg.slstm_layers:
+                pl = jax.tree.map(lambda a: a[i_s], b["slstm"])
+                x = X.slstm_train(pl, x, cfg)
+                i_s += 1
+            else:
+                pl = jax.tree.map(lambda a: a[i_m], b["mlstm"])
+                x = X.mlstm_train(pl, x, cfg)
+                i_m += 1
+        return x
+
+    def loss(self, params, batch, remat: bool = True):
+        h = self.apply(params, batch, remat=remat)
+        logits = L.unembed(h, params["embed"])
+        return L.softmax_xent(logits, batch["labels"], self.cfg.vocab)
+
+    # -- serving -------------------------------------------------------------
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        if cfg.family in ("dense", "vlm", "moe"):
+            Ln = cfg.num_layers
+            kv = (Ln, batch_size, max_len, self.hkv, cfg.head_dim)
+            return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                    "len": jnp.zeros((), jnp.int32)}
+        if cfg.family == "hybrid":
+            G = _layer_counts(cfg)
+            kv = (G, batch_size, max_len, self.hkv, cfg.head_dim)
+            di = cfg.mamba.expand * cfg.d_model
+            n_mamba = G * (cfg.attn_every - 1)
+            return {
+                "k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                "conv": jnp.zeros((n_mamba, batch_size,
+                                   cfg.mamba.d_conv - 1, di), dt),
+                "ssm": jnp.zeros((n_mamba, batch_size, di,
+                                  cfg.mamba.d_state), jnp.float32),
+                "len": jnp.zeros((), jnp.int32),
+            }
+        if cfg.family == "ssm":
+            n_s = len(cfg.slstm_layers)
+            n_m = cfg.num_layers - n_s
+            H, hd = cfg.num_heads, cfg.head_dim
+            return {
+                "C": jnp.zeros((n_m, batch_size, H, hd, hd), jnp.float32),
+                "n": jnp.zeros((n_m, batch_size, H, hd), jnp.float32),
+                "c_s": jnp.zeros((n_s, batch_size, H, hd), jnp.float32),
+                "h_s": jnp.zeros((n_s, batch_size, H, hd), jnp.float32),
+                "len": jnp.zeros((), jnp.int32),
+            }
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, cache, tokens):
+        """One decode step for all batch rows. tokens [B] -> logits [B,V]."""
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        x = params["embed"][tokens][:, None].astype(dt)     # [B,1,d]
+        B = x.shape[0]
+        pos = jnp.broadcast_to(cache["len"], (B,))
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, cache = self._decode_stack(params, cache, x, pos)
+        elif cfg.family == "hybrid":
+            x, cache = self._decode_hybrid(params, cache, x, pos)
+        elif cfg.family == "ssm":
+            x, cache = self._decode_xlstm(params, cache, x)
+        h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(h, params["embed"])[:, 0]
+        cache = dict(cache)
+        cache["len"] = cache["len"] + 1
+        return logits.astype(jnp.float32), cache
+
+    def _decode_stack(self, params, cache, x, pos):
+        cfg = self.cfg
+        keys = [k for k in ("ln1", "ln2", "attn", "mlp", "moe")
+                if k in params]
+        stacked = {k: params[k] for k in keys}
+
+        def body(x, args):
+            pl_flat, ck, cv = args
+            h = L.rmsnorm(x, pl_flat["ln1"], cfg.norm_eps)
+            a, ck, cv = L.attention_decode(pl_flat["attn"], h, cfg, pos,
+                                           ck, cv, cache["len"])
+            x = x + a
+            h = L.rmsnorm(x, pl_flat["ln2"], cfg.norm_eps)
+            pl2 = {k: pl_flat[k] for k in ("mlp", "moe") if k in pl_flat}
+            x = x + self._ffn(pl2, h, cfg.moe is not None)
+            return x, (ck, cv)
+
+        x, (ks, vs) = scan_or_unroll(
+            lax.scan, body, x, (stacked, cache["k"], cache["v"]),
+            cfg.num_layers)
+        cache = dict(cache)
+        cache["k"], cache["v"] = ks, vs
+        return x, cache
+
+    def _decode_hybrid(self, params, cache, x, pos):
+        cfg = self.cfg
+        per = cfg.attn_every
+        G = _layer_counts(cfg)
+        g = params["groups"]
+        ks_new, vs_new = [], []
+        conv_new, ssm_new = [], []
+        i_mamba = 0
+        i_mlp = i_moe = 0
+        for gi in range(G):
+            for j in range(per):
+                h = L.rmsnorm(x, g["ln1"][gi, j], cfg.norm_eps)
+                if j == 0:
+                    pl = jax.tree.map(lambda a: a[gi], g["attn"])
+                    a, ck, cv = L.attention_decode(
+                        pl, h, cfg, pos, cache["k"][gi], cache["v"][gi],
+                        cache["len"])
+                    ks_new.append(ck)
+                    vs_new.append(cv)
+                    x = x + a
+                else:
+                    pl = jax.tree.map(lambda a: a[i_mamba], g["mamba"])
+                    st = {"conv": cache["conv"][i_mamba],
+                          "ssm": cache["ssm"][i_mamba]}
+                    a, st = M.mamba_decode(pl, h, cfg.mamba, st)
+                    conv_new.append(st["conv"])
+                    ssm_new.append(st["ssm"])
+                    x = x + a
+                    i_mamba += 1
+                h = L.rmsnorm(x, g["ln2"][gi, j], cfg.norm_eps)
+                if j % 2 == 1:
+                    pl = {"moe": jax.tree.map(lambda a: a[i_moe], g["moe"])}
+                    x = x + self._ffn(pl, h, True)
+                    i_moe += 1
+                else:
+                    pl = jax.tree.map(lambda a: a[i_mlp], g["mlp"])
+                    x = x + L.mlp(pl, h)
+                    i_mlp += 1
+        cache = dict(cache)
+        cache["k"] = jnp.stack(ks_new)
+        cache["v"] = jnp.stack(vs_new)
+        cache["conv"] = jnp.stack(conv_new)
+        cache["ssm"] = jnp.stack(ssm_new)
+        return x, cache
+
+    def _decode_xlstm(self, params, cache, x):
+        cfg = self.cfg
+        b = params["blocks"]
+        C_new, n_new, cs_new, hs_new = [], [], [], []
+        i_m = i_s = 0
+        for l in range(cfg.num_layers):
+            if l in cfg.slstm_layers:
+                pl = jax.tree.map(lambda a: a[i_s], b["slstm"])
+                x, st = X.slstm_decode(pl, x, cfg,
+                                       {"c": cache["c_s"][i_s],
+                                        "h": cache["h_s"][i_s]})
+                cs_new.append(st["c"])
+                hs_new.append(st["h"])
+                i_s += 1
+            else:
+                pl = jax.tree.map(lambda a: a[i_m], b["mlstm"])
+                x, st = X.mlstm_decode(pl, x, cfg,
+                                       {"C": cache["C"][i_m],
+                                        "n": cache["n"][i_m]})
+                C_new.append(st["C"])
+                n_new.append(st["n"])
+                i_m += 1
+        cache = dict(cache)
+        cache["C"] = jnp.stack(C_new)
+        cache["n"] = jnp.stack(n_new)
+        cache["c_s"] = jnp.stack(cs_new)
+        cache["h_s"] = jnp.stack(hs_new)
+        return x, cache

@@ -1,0 +1,34 @@
+"""Loop-unrolling switch for cost-calibration lowerings.
+
+XLA's ``cost_analysis`` counts a ``while`` (scan/fori) body ONCE, so the
+roofline pass lowers small-depth *unrolled* model variants and fits the
+linear per-layer cost model (see launch/dryrun.py). Production lowerings
+keep scans (compact HLO, fast compile); only the calibration sets
+``UNROLL = True``.
+"""
+
+UNROLL = False
+
+
+def set_unroll(v: bool) -> None:
+    global UNROLL
+    UNROLL = v
+
+
+def scan_or_unroll(scan_fn, body, init, xs, length: int):
+    """lax.scan when UNROLL is off; python loop over leading axis otherwise."""
+    if not UNROLL:
+        return scan_fn(body, init, xs)
+    import jax
+    carry = init
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        import jax.numpy as jnp
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,182 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Encoder: bidirectional attention over precomputed frame embeddings
+(`input_specs` supplies them — the paper-pool spec marks the modality
+frontend as a stub). Decoder: causal self-attention + cross-attention to the
+encoder output, learned absolute position embeddings (Whisper uses no RoPE).
+
+Serving: cross-attention K/V are computed once at prefill and cached;
+decode steps update only the self-attention cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.unroll import scan_or_unroll
+from repro.sharding.ctx import head_plan, shard
+
+MAX_POS = 40960     # covers the 32k shapes; sharded over TP rows
+
+
+class EncDecModel:
+    def __init__(self, cfg, tp: int = 16):
+        self.cfg = cfg
+        self.hq, self.hkv, self.shard_heads = head_plan(
+            cfg.num_heads, cfg.kv_heads, tp)
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 16))
+        d = cfg.d_model
+        Le, Ld = cfg.encoder_layers, cfg.num_layers
+        p = {
+            "embed": L.normal(next(ks), (cfg.vocab, d), 0.02),
+            "enc_pos": L.normal(next(ks), (MAX_POS, d), 0.02),
+            "dec_pos": L.normal(next(ks), (MAX_POS, d), 0.02),
+            "final_norm": jnp.ones(d),
+            "enc_final_norm": jnp.ones(d),
+            "enc": {
+                "ln1": jnp.ones((Le, d)), "ln2": jnp.ones((Le, d)),
+                "attn": L.init_attn(next(ks), cfg, Le, self.hq, self.hkv),
+                "mlp": L.init_mlp(next(ks), d, cfg.d_ff, Le),
+            },
+            "dec": {
+                "ln1": jnp.ones((Ld, d)), "ln2": jnp.ones((Ld, d)),
+                "ln3": jnp.ones((Ld, d)),
+                "attn": L.init_attn(next(ks), cfg, Ld, self.hq, self.hkv),
+                "xattn": L.init_attn(next(ks), cfg, Ld, self.hq, self.hkv),
+                "mlp": L.init_mlp(next(ks), d, cfg.d_ff, Ld),
+            },
+        }
+        return p
+
+    def encode(self, params, enc_embeds, remat: bool = True):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        S = enc_embeds.shape[1]
+        x = enc_embeds.astype(dt) + params["enc_pos"][:S].astype(dt)
+        x = shard(x, "batch", None, None)
+
+        def body(x, pl):
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            x = x + L.attention_train(pl["attn"], h, cfg, pos=None,
+                                      causal=False)
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            x = x + L.mlp(pl["mlp"], h)
+            return shard(x, "batch", None, None), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = scan_or_unroll(lax.scan, fn, x, params["enc"],
+                              cfg.encoder_layers)
+        return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out):
+        """Per-layer cross-attention K/V from encoder output: [Ld,B,Se,H,hd]."""
+        cfg = self.cfg
+        dt = enc_out.dtype
+
+        def body(_, pl):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, pl["wk"].astype(dt))
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, pl["wv"].astype(dt))
+            if cfg.qkv_bias:
+                k = k + pl["bk"].astype(dt)
+                v = v + pl["bv"].astype(dt)
+            return None, (k, v)
+
+        _, (ks, vs) = scan_or_unroll(lax.scan, body, None,
+                                     params["dec"]["xattn"],
+                                     cfg.num_layers)
+        return ks, vs
+
+    def _dec_block(self, pl, x, xk, xv, cfg):
+        h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+        x = x + L.attention_train(pl["attn"], h, cfg, pos=None, causal=True)
+        h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+        # cross-attention: q from decoder; k/v precomputed from encoder
+        q = jnp.einsum("bsd,dhk->bshk", h, pl["xattn"]["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            q = q + pl["xattn"]["bq"].astype(x.dtype)
+        o = L._gqa_scores_out(q, xk, xv, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           pl["xattn"]["wo"].astype(x.dtype))
+        h = L.rmsnorm(x, pl["ln3"], cfg.norm_eps)
+        x = x + L.mlp(pl["mlp"], h)
+        return shard(x, "batch", None, None)
+
+    def loss(self, params, batch, remat: bool = True):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        enc_out = self.encode(params, batch["enc_embeds"], remat)
+        xk, xv = self._cross_kv(params, enc_out)
+        tok = batch["dec_tokens"]
+        S = tok.shape[1]
+        x = params["embed"][tok].astype(dt) + params["dec_pos"][:S].astype(dt)
+        x = shard(x, "batch", None, None)
+
+        def body(x, args):
+            pl, k, v = args
+            return self._dec_block(pl, x, k, v, cfg), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = scan_or_unroll(lax.scan, fn, x, (params["dec"], xk, xv),
+                              cfg.num_layers)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x, params["embed"])
+        return L.softmax_xent(logits, batch["labels"], cfg.vocab)
+
+    # -- serving -------------------------------------------------------------
+
+    def init_cache(self, batch_size: int, max_len: int, enc_len: int):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        Ld = cfg.num_layers
+        kv = (Ld, batch_size, max_len, self.hkv, cfg.head_dim)
+        xkv = (Ld, batch_size, enc_len, self.hkv, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt),
+                "len": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, cache, enc_embeds):
+        """Encode audio + fill cross-attention caches."""
+        enc_out = self.encode(params, enc_embeds, remat=False)
+        xk, xv = self._cross_kv(params, enc_out)
+        cache = dict(cache)
+        cache["xk"], cache["xv"] = xk, xv
+        return cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        B = tokens.shape[0]
+        pos = jnp.broadcast_to(cache["len"], (B,))
+        x = (params["embed"][tokens][:, None].astype(dt)
+             + params["dec_pos"][cache["len"]].astype(dt))
+
+        def body(x, args):
+            pl, ck, cv, xk, xv = args
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            a, ck, cv = L.attention_decode(pl["attn"], h, cfg, pos, ck, cv,
+                                           cache["len"])
+            x = x + a
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, pl["xattn"]["wq"].astype(dt))
+            if cfg.qkv_bias:
+                q = q + pl["xattn"]["bq"].astype(dt)
+            o = L._gqa_scores_out(q, xk, xv, causal=False)
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               pl["xattn"]["wo"].astype(dt))
+            h = L.rmsnorm(x, pl["ln3"], cfg.norm_eps)
+            x = x + L.mlp(pl["mlp"], h)
+            return x, (ck, cv)
+
+        x, (ks, vs) = scan_or_unroll(
+            lax.scan, body, x, (params["dec"], cache["k"], cache["v"],
+                                cache["xk"], cache["xv"]), cfg.num_layers)
+        cache = dict(cache)
+        cache["k"], cache["v"] = ks, vs
+        cache["len"] = cache["len"] + 1
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return L.unembed(x, params["embed"])[:, 0].astype(jnp.float32), cache

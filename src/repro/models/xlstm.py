@@ -1,0 +1,205 @@
+"""xLSTM blocks [arXiv:2405.04517]: chunkwise-parallel mLSTM + sequential sLSTM.
+
+mLSTM keeps a matrix memory C [hd, hd] per head with scalar input/forget
+gates; its linear recurrence admits the GLA-style chunkwise form (intra-chunk
+attention-like term + inter-chunk state carry) — the TPU-native layout.
+sLSTM's recurrence is not parallelizable (paper), so it runs as a
+``lax.scan`` over time with block-diagonal (per-head) recurrent weights.
+
+Stabilization: gates use sigmoid (f) and exp-capped (i, via sigmoid) forms
+instead of the paper's exp-with-max-stabilizer — documented simplification;
+shapes/FLOPs match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import normal, rmsnorm
+from repro.models.unroll import scan_or_unroll
+from repro.sharding.ctx import shard
+
+CHUNK = 64
+
+
+def init_mlstm(key, cfg, layers):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.ones((layers, d)),
+        "wq": normal(ks[0], (layers, d, H, hd), d ** -0.5),
+        "wk": normal(ks[1], (layers, d, H, hd), d ** -0.5),
+        "wv": normal(ks[2], (layers, d, H, hd), d ** -0.5),
+        "wi": normal(ks[3], (layers, d, H), d ** -0.5),
+        "wf": normal(ks[4], (layers, d, H), d ** -0.5),
+        "bf": jnp.full((layers, H), 3.0),       # forget bias -> long memory
+        "wgate": normal(ks[5], (layers, d, H * hd), d ** -0.5),
+        "wo": normal(ks[6], (layers, H, hd, d), (H * hd) ** -0.5),
+    }
+
+
+def _mlstm_gates(p, x):
+    i = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"]))
+    f = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"])
+                       + p["bf"])
+    return i, f
+
+
+def mlstm_train(p, x, cfg):
+    """Chunkwise-parallel mLSTM. x [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(x.dtype)) * hd ** -0.5
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(x.dtype))
+    i, f = _mlstm_gates(p, xn)                              # [B,S,H] f32
+
+    ch = min(CHUNK, S)
+    nc = S // ch
+    assert S % ch == 0
+
+    def resh(t):
+        return t.reshape((B, nc, ch) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)                  # [nc,B,ch,H,hd]
+    ic, fc = resh(i), resh(f)                               # [nc,B,ch,H]
+
+    def body(carry, args):
+        C, n = carry                                        # [B,H,hd,hd],[B,H,hd]
+        qq, kk, vv, ii, ff = args
+        lf = jnp.log(ff + 1e-8)                             # [B,ch,H]
+        acum = jnp.cumsum(lf, axis=1)                       # inclusive
+        # inter-chunk: state contribution decayed to each position
+        dec = jnp.exp(acum)                                 # [B,ch,H]
+        y_int = jnp.einsum("bchd,bhde->bche", qq.astype(jnp.float32), C)
+        y_int = y_int * dec[..., None]
+        n_int = jnp.einsum("bchd,bhd->bch", qq.astype(jnp.float32), n)
+        n_int = n_int * dec
+        # intra-chunk: decay(t,s) = exp(acum_t - acum_s) * i_s for s <= t
+        w_ts = jnp.exp(acum[:, :, None, :] - acum[:, None, :, :])  # [B,t,s,H]
+        mask = (jnp.arange(ch)[:, None] >= jnp.arange(ch)[None, :])
+        w_ts = jnp.where(mask[None, :, :, None], w_ts, 0.0)
+        w_ts = w_ts * ii[:, None, :, :]
+        sc = jnp.einsum("bthd,bshd->btsh",
+                        qq.astype(jnp.float32), kk.astype(jnp.float32))
+        sc = sc * w_ts
+        y_intra = jnp.einsum("btsh,bshd->bthd", sc, vv.astype(jnp.float32))
+        n_intra = sc.sum(axis=2)                            # [B,t,H]
+        # combine + normalize
+        y = y_int + y_intra
+        nn = jnp.abs(n_int + n_intra)
+        y = y / jnp.maximum(nn, 1.0)[..., None]
+        # state update to end of chunk
+        decN = jnp.exp(acum[:, -1:, :] - acum)              # [B,ch,H]
+        wN = decN * ii                                      # [B,ch,H]
+        C_new = (jnp.exp(acum[:, -1])[:, :, None, None] * C
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wN,
+                              kk.astype(jnp.float32), vv.astype(jnp.float32)))
+        n_new = (jnp.exp(acum[:, -1])[:, :, None] * n
+                 + jnp.einsum("bsh,bshd->bhd", wN, kk.astype(jnp.float32)))
+        return (C_new, n_new), y.astype(x.dtype)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    _, ys = scan_or_unroll(lax.scan, body, (C0, n0),
+                           (qc, kc, vc, ic, fc), nc)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xn, p["wgate"].astype(x.dtype)))
+    y = y.reshape(B, S, H * hd) * gate
+    y = shard(y, "batch", None, "tp")
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(B, S, H, hd),
+                     p["wo"].astype(x.dtype))
+    return x + out
+
+
+def mlstm_init_state(cfg, batch):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg, state):
+    """One-token mLSTM step. x [B,1,d]."""
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.head_dim
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(x.dtype))[:, 0]
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(x.dtype))[:, 0] * hd ** -0.5
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(x.dtype))[:, 0]
+    i, f = _mlstm_gates(p, xn)
+    i, f = i[:, 0], f[:, 0]                                 # [B,H]
+    C = (f[..., None, None] * state["C"]
+         + i[..., None, None] * jnp.einsum(
+             "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)))
+    n = f[..., None] * state["n"] + i[..., None] * k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    nn = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n))
+    y = y / jnp.maximum(nn, 1.0)[..., None]
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xn, p["wgate"].astype(x.dtype)))
+    y = (y.reshape(B, 1, H * hd).astype(x.dtype)) * gate
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(B, 1, H, hd),
+                     p["wo"].astype(x.dtype))
+    return x + out, {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: strictly sequential scan with block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, layers):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((layers, d)),
+        "wx": normal(ks[0], (layers, d, 4, H, hd), d ** -0.5),   # z,i,f,o
+        "wr": normal(ks[1], (layers, 4, H, hd, hd), hd ** -0.5),
+        "b": jnp.zeros((layers, 4, H, hd)),
+        "wo": normal(ks[2], (layers, H, hd, d), (H * hd) ** -0.5),
+    }
+
+
+def slstm_init_state(cfg, batch):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {"c": jnp.zeros((batch, H, hd), jnp.float32),
+            "h": jnp.zeros((batch, H, hd), jnp.float32)}
+
+
+def _slstm_step(p, xg, state):
+    """xg [B,4,H,hd] (pre-computed x projections); returns (state, out)."""
+    c, h = state["c"], state["h"]
+    rec = jnp.einsum("bhk,ghkl->bghl", h, p["wr"])          # [B,4,H,hd]
+    g = xg.astype(jnp.float32) + rec + p["b"]
+    z = jnp.tanh(g[:, 0])
+    i = jax.nn.sigmoid(g[:, 1])
+    f = jax.nn.sigmoid(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    c = f * c + i * z
+    h = o * jnp.tanh(c)
+    return {"c": c, "h": h}, h
+
+
+def slstm_train(p, x, cfg):
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dghk->bsghk", xn, p["wx"].astype(x.dtype))
+
+    def body(state, xg_t):
+        return _slstm_step(p, xg_t, state)
+
+    state0 = slstm_init_state(cfg, B)
+    _, hs = lax.scan(body, state0, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                   # [B,S,H,hd]
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+    return x + out
+
+
+def slstm_decode(p, x, cfg, state):
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dghk->bsghk", xn, p["wx"].astype(x.dtype))[:, 0]
+    state, h = _slstm_step(p, xg, state)
+    out = jnp.einsum("bhk,hkd->bd", h.astype(x.dtype),
+                     p["wo"].astype(x.dtype))[:, None]
+    return x + out, state

@@ -1,0 +1,3 @@
+from repro.runtime.carbon_gate import CarbonGate  # noqa: F401
+from repro.runtime.fault import FailureInjector, run_with_restarts  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401

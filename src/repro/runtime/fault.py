@@ -1,0 +1,44 @@
+"""Fault tolerance: failure injection + checkpoint/restart driver."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    """Deterministic pseudo-random failures for tests/drills."""
+
+    def __init__(self, prob_per_step: float, seed: int = 0):
+        self.prob = prob_per_step
+        self.rng = np.random.default_rng(seed)
+
+    def maybe_fail(self, step: int) -> None:
+        if self.rng.random() < self.prob:
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def run_with_restarts(train_fn, ckpt_manager, init_state_fn, total_steps: int,
+                      max_restarts: int = 10):
+    """Run ``train_fn(state, start_step, stop_step)`` with restart-on-failure.
+
+    ``train_fn`` must checkpoint through ``ckpt_manager`` and raise on
+    failure; restarts resume from the latest manifest (the data pipeline is
+    deterministic per step, so the stream resumes exactly).
+    Returns (final_state, steps_done, n_restarts).
+    """
+    restarts = 0
+    while True:
+        state, step = ckpt_manager.restore_latest()
+        if state is None:
+            state, step = init_state_fn(), -1
+        start = step + 1
+        try:
+            state = train_fn(state, start, total_steps)
+            return state, total_steps, restarts
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

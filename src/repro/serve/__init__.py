@@ -1,0 +1,1 @@
+from repro.serve.batching import ContinuousBatcher, Request  # noqa: F401

@@ -1,0 +1,76 @@
+"""Continuous batching over the single-token decode step.
+
+Fixed B decode slots; finished/empty slots are refilled from the request
+queue each iteration (tokens of dead slots still step but are masked out).
+Greedy sampling; per-request max_tokens/eos.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_tokens: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, model, params, batch_size: int, max_len: int,
+                 eos: int = 1):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.eos = eos
+        self.cache = model.init_cache(batch_size, max_len)
+        self.slots: list[Request | None] = [None] * batch_size
+        self.queue: list[Request] = []
+        self.cur = np.zeros(batch_size, dtype=np.int32)
+        self.budget = np.zeros(batch_size, dtype=np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.B):
+            if (self.slots[i] is None or self.slots[i].done) and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # simple prompt handling: feed prompt tokens step by step
+                self.cur[i] = req.prompt[0] if req.prompt else self.eos
+                self.budget[i] = req.max_tokens + len(req.prompt)
+
+    def step(self) -> None:
+        self._fill_slots()
+        logits, self.cache = self.model.decode_step(
+            self.params, self.cache, jnp.asarray(self.cur))
+        nxt = np.asarray(logits.argmax(-1), dtype=np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            consumed = len(req.out) + 1
+            if consumed < len(req.prompt):          # still teacher-forcing
+                self.cur[i] = req.prompt[consumed]
+                req.out.append(int(self.cur[i]))
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            self.cur[i] = tok
+            self.budget[i] -= 1
+            if tok == self.eos or self.budget[i] <= 0:
+                req.done = True
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(r is None or r.done for r in self.slots):
+                break
+            self.step()
+        return [r for r in self.slots if r is not None] + self.queue

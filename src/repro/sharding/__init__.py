@@ -1,0 +1,1 @@
+from repro.sharding.ctx import configure, reset, shard, head_plan  # noqa: F401

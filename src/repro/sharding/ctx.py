@@ -1,0 +1,86 @@
+"""Sharding context: logical-axis constraints that no-op without a mesh.
+
+Model code annotates activations with *logical* axes ("batch", "tp", ...);
+``configure(mesh)`` binds them to mesh axes for the dry-run / launcher,
+while unit tests and single-device runs leave the context unset so every
+``shard()`` is a no-op. This keeps model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: dict | None = None
+
+
+def configure(mesh) -> None:
+    """Bind logical axes to this mesh ('pod'? 'data', 'model')."""
+    global _CTX
+    batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    _CTX = {
+        "mesh": mesh,
+        "rules": {
+            "batch": batch,
+            "data": "data",
+            "tp": "model",
+            "kv_tp": None,       # kv heads replicated over TP by default
+            "expert": "model",
+            "cap": "data",       # MoE capacity axis
+            "seq_kv": "data",    # long-context: KV sequence over data
+        },
+    }
+
+
+def reset() -> None:
+    global _CTX
+    _CTX = None
+
+
+def axis_size(logical: str) -> int:
+    if _CTX is None:
+        return 1
+    rule = _CTX["rules"].get(logical)
+    if rule is None:
+        return 1
+    mesh = _CTX["mesh"]
+    if isinstance(rule, tuple):
+        return math.prod(mesh.shape[a] for a in rule)
+    return mesh.shape[rule]
+
+
+def shard(x, *axes):
+    """with_sharding_constraint on logical axes; no-op without a mesh."""
+    if _CTX is None:
+        return x
+    rules = _CTX["rules"]
+    spec = []
+    for a in axes:
+        if a is None:
+            spec.append(None)
+        else:
+            spec.append(rules.get(a))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX["mesh"], P(*spec)))
+
+
+def tp_size() -> int:
+    return axis_size("tp")
+
+
+def head_plan(num_heads: int, kv_heads: int, tp: int = 16):
+    """Baseline TP plan for attention heads.
+
+    Returns (Hq_pad, Hkv_pad, shard_heads). Pads q heads to a multiple of
+    ``tp`` and kv heads to a divisor of the padded q count, so the grouped
+    (repeat-kv) einsum shards cleanly on the head axis. Tiny models
+    (Hq < tp/2) replicate heads instead (their FFN still shards).
+    """
+    if num_heads < tp // 2:
+        return num_heads, kv_heads, False
+    hq = -(-num_heads // tp) * tp
+    hkv = kv_heads
+    while hq % hkv != 0:
+        hkv += 1
+    return hq, hkv, True

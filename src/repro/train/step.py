@@ -1,0 +1,75 @@
+"""Train step: microbatched gradient accumulation + AdamW, pjit-ready."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import shard
+from repro.train.optimizer import adamw_init, adamw_update, compress_grads, lr_schedule
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+def init_state(model, key, mixed_precision: bool = False):
+    params = model.init(key)
+    opt = adamw_init(params, mixed_precision=mixed_precision)
+    if mixed_precision:
+        import jax.numpy as _jnp
+        params = jax.tree.map(lambda p: p.astype(_jnp.bfloat16), params)
+    return {"params": params, "opt": opt}
+
+
+def make_train_step(model, *, microbatches: int = 1, peak_lr: float = 3e-4,
+                    total_steps: int = 10_000, warmup: int = 200,
+                    grad_compress: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split_mb(x):
+                b = x.shape[0] if x.ndim >= 1 else 0
+                # positions for vlm are [3,B,S]: split on axis 1
+                if x.ndim == 3 and x.shape[0] == 3:
+                    return x.reshape((3, microbatches, -1) + x.shape[2:]
+                                     ).swapaxes(0, 1)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split_mb, batch)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + loss), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        grads = compress_grads(grads, grad_compress)
+        lr = lr_schedule(state["opt"]["step"] + 1, peak=peak_lr,
+                         warmup=warmup, total=total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, state["opt"], lr)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

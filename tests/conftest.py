@@ -1,0 +1,32 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (dryrun.py sets its own flag in-process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.cluster import make_cluster
+from repro.core import build_instance, heft_mapping
+from repro.workflows import make_workflow
+
+
+@pytest.fixture(scope="session")
+def small_platform():
+    return make_cluster(1, seed=0)      # 6 compute processors
+
+
+@pytest.fixture(scope="session")
+def medium_instance(small_platform):
+    wf = make_workflow("eager", 6, seed=3)
+    mp = heft_mapping(wf, small_platform)
+    return build_instance(wf, mp, small_platform)
+
+
+def random_instance(n_tasks=24, seed=0, platform=None, kind="atacseq"):
+    platform = platform or make_cluster(1, seed=seed)
+    wf = make_workflow(kind, max(n_tasks // 12, 1), seed=seed)
+    mp = heft_mapping(wf, platform)
+    return build_instance(wf, mp, platform), platform

@@ -1,0 +1,70 @@
+"""Carbon-cost oracle agreement: subinterval sweep == per-unit == jnp."""
+import numpy as np
+import pytest
+
+from repro.cluster import make_cluster
+from repro.core import (
+    ALL_VARIANTS,
+    asap_schedule,
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    heft_mapping,
+    schedule,
+    schedule_cost,
+    schedule_cost_jnp,
+)
+from repro.core.carbon import cost_timeline, work_timeline
+from repro.workflows import make_workflow
+
+
+@pytest.mark.parametrize("scenario", ["S1", "S2", "S3", "S4"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_oracles_agree(scenario, seed):
+    plat = make_cluster(1, seed=seed)
+    wf = make_workflow("atacseq", 4, seed=seed)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 1.3)
+    prof = generate_profile(scenario, T, plat, J=16, seed=seed)
+    start = asap_schedule(inst)
+    c1 = schedule_cost(inst, prof, start)
+    c2 = cost_timeline(inst, prof, start)
+    c3 = float(schedule_cost_jnp(start, inst.dur, inst.task_work,
+                                 prof.bounds, prof.effective(inst.idle_total),
+                                 T))
+    assert c1 == c2
+    assert abs(c3 - c1) < 1e-3 * max(c1, 1)
+
+
+def test_profile_guarantees():
+    plat = make_cluster(2, seed=0)
+    prof = generate_profile("S3", 500, plat, J=24, seed=1)
+    assert prof.T == 500
+    assert (prof.budget >= plat.idle_total).all()
+    cap = plat.idle_total + 0.8 * plat.p_work.sum()
+    assert (prof.budget <= cap + 1).all()
+
+
+def test_work_timeline_matches_deltas():
+    plat = make_cluster(1, seed=0)
+    wf = make_workflow("bacass", 2, seed=2)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    start = asap_schedule(inst)
+    T = int((start + inst.dur).max()) + 5
+    tl = work_timeline(inst, T, start)
+    # brute force
+    ref = np.zeros(T, dtype=np.int64)
+    for v in range(inst.num_tasks):
+        ref[start[v]:start[v] + inst.dur[v]] += inst.task_work[v]
+    assert (tl == ref).all()
+
+
+def test_variant_costs_recorded_consistently():
+    plat = make_cluster(1, seed=1)
+    wf = make_workflow("methylseq", 4, seed=1)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 1.5)
+    prof = generate_profile("S1", T, plat, J=16, seed=0)
+    for v in ALL_VARIANTS:
+        r = schedule(inst, prof, plat, v.name)
+        assert r.cost == schedule_cost(inst, prof, r.start)

@@ -1,0 +1,143 @@
+"""Exactness: pseudo-poly DP == poly DP == ILP == brute force (uniproc),
+ILP lower-bounds heuristics (multiproc), UCAS/3-partition reduction."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.cluster import make_cluster, make_uniform_platform
+from repro.core import (
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    schedule,
+    schedule_cost,
+    validate_schedule,
+)
+from repro.core.carbon import PowerProfile
+from repro.core.dag import trivial_mapping
+from repro.core.dp_uniproc import dp_poly, dp_pseudo
+from repro.core.ilp import solve_ilp
+from repro.workflows import independent_tasks, layered_random, make_workflow
+from repro.core.heft import heft_mapping
+
+
+def brute_force_uniproc(inst, profile):
+    """Enumerate all feasible start tuples (chain order). Tiny inputs only."""
+    chain = [c for c in inst.proc_chains if c][0]
+    T = profile.T
+    durs = [int(inst.dur[v]) for v in chain]
+    best = (None, np.inf)
+
+    def rec(i, t, starts):
+        nonlocal best
+        if i == len(chain):
+            s = np.zeros(inst.num_tasks, dtype=np.int64)
+            for v, st in zip(chain, starts):
+                s[v] = st
+            c = schedule_cost(inst, profile, s)
+            if c < best[1]:
+                best = (s, c)
+            return
+        rem = sum(durs[i:])
+        for st in range(t, T - rem + 1):
+            rec(i + 1, st + durs[i], starts + [st])
+
+    rec(0, 0, [])
+    return best
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_dp_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    plat = make_cluster(1, seed=seed)
+    wf = layered_random(4, 3, seed=seed)
+    inst = build_instance(wf, trivial_mapping(wf, plat, by="single"), plat)
+    D = deadline_from_asap(inst, 1.0)
+    T = D + 4
+    J = 3
+    bounds = np.round(np.linspace(0, T, J + 1)).astype(np.int64)
+    budget = plat.idle_total + rng.integers(
+        0, int(inst.task_work.max()) + 5, size=J)
+    prof = PowerProfile(bounds=bounds, budget=budget)
+    c_ps, s_ps = dp_pseudo(inst, prof)
+    c_pl, s_pl = dp_poly(inst, prof)
+    _, c_bf = brute_force_uniproc(inst, prof)
+    assert c_ps == c_pl == c_bf
+    validate_schedule(inst, prof, s_ps)
+    validate_schedule(inst, prof, s_pl)
+    assert schedule_cost(inst, prof, s_ps) == c_ps
+    assert schedule_cost(inst, prof, s_pl) == c_pl
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ilp_equals_dp_uniproc(seed):
+    rng = np.random.default_rng(seed + 100)
+    plat = make_cluster(1, seed=seed)
+    wf = layered_random(5, 3, seed=seed + 7)
+    inst = build_instance(wf, trivial_mapping(wf, plat, by="single"), plat)
+    T = deadline_from_asap(inst, 1.4)
+    J = 4
+    bounds = np.round(np.linspace(0, T, J + 1)).astype(np.int64)
+    budget = plat.idle_total + rng.integers(
+        0, int(inst.task_work.max()) + 10, size=J)
+    prof = PowerProfile(bounds=bounds, budget=budget)
+    c_dp, _ = dp_pseudo(inst, prof)
+    res = solve_ilp(inst, prof, time_limit=120)
+    assert abs(res.cost - c_dp) < 1e-6
+
+
+def test_ilp_lower_bounds_heuristics():
+    plat = make_cluster(1, seed=0)
+    wf = make_workflow("bacass", 2, seed=7)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 1.5)
+    prof = generate_profile("S1", T, plat, J=8, seed=1)
+    res = solve_ilp(inst, prof, time_limit=180)
+    validate_schedule(inst, prof, res.start)
+    assert abs(schedule_cost(inst, prof, res.start) - res.cost) < 1e-6
+    for v in ("slack", "pressWR-LS", "slackR-LS", "asap"):
+        assert schedule(inst, prof, plat, v).cost >= res.cost - 1e-6
+
+
+def test_ucas_three_partition_reduction():
+    """Theorem 4.3 construction: zero-cost schedule exists iff 3-partition."""
+    # yes-instance: B=12, triplets exist
+    xs = [4, 4, 4, 4, 4, 4]          # n=2, B=12 (relaxed B/4<x<B/2 -> x=4)
+    n = 2
+    B = 12
+    plat = make_uniform_platform(len(xs))
+    wf = independent_tasks(xs)
+    mp = trivial_mapping(wf, plat)
+    # remap: task i on processor i
+    from repro.core.dag import FixedMapping
+    mp = FixedMapping(
+        proc=np.arange(len(xs), dtype=np.int64),
+        order=tuple((i,) for i in range(len(xs))),
+        comm_order={})
+    inst = build_instance(wf, mp, plat, dur=np.asarray(xs))
+    # intervals: n blocks of length B with budget 1, separated by len-1 zeros
+    bounds = [0]
+    budget = []
+    for k in range(n):
+        bounds.append(bounds[-1] + B)
+        budget.append(1)
+        if k < n - 1:
+            bounds.append(bounds[-1] + 1)
+            budget.append(0)
+    prof = PowerProfile(bounds=np.asarray(bounds, dtype=np.int64),
+                        budget=np.asarray(budget, dtype=np.int64))
+    res = solve_ilp(inst, prof, time_limit=120)
+    assert res.cost < 1e-6           # partition exists -> zero carbon
+
+    # no-instance: total work exceeds green capacity -> positive cost
+    xs_bad = [5, 5, 5, 5, 4, 4]      # sum = 28 > n*B = 24
+    wf2 = independent_tasks(xs_bad)
+    mp2 = FixedMapping(
+        proc=np.arange(len(xs_bad), dtype=np.int64),
+        order=tuple((i,) for i in range(len(xs_bad))),
+        comm_order={})
+    T2 = int(np.asarray(bounds)[-1])
+    inst2 = build_instance(wf2, mp2, plat, dur=np.asarray(xs_bad))
+    res2 = solve_ilp(inst2, prof, time_limit=120)
+    assert res2.cost > 0

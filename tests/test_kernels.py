@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + real instances."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import make_cluster
+from repro.core import (
+    asap_schedule,
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    heft_mapping,
+    schedule_cost,
+)
+from repro.core.carbon import work_timeline
+from repro.kernels.carbon_cost import deficit_timeline
+from repro.kernels.gain_scan import gain_scan
+from repro.kernels.ops import carbon_cost, ls_gains
+from repro.kernels.ref import deficit_timeline_ref, gain_scan_ref
+from repro.workflows import make_workflow
+
+
+def _rand(n, t, seed):
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, max(t - 20, 1), n).astype(np.float32)
+    durs = rng.integers(1, 20, n).astype(np.float32)
+    works = rng.integers(0, 120, n).astype(np.float32)
+    g = rng.integers(0, 2500, t).astype(np.float32)
+    return starts, durs, works, g
+
+
+@pytest.mark.parametrize("n", [1, 7, 63, 300, 1000])
+@pytest.mark.parametrize("t", [16, 700, 2048])
+def test_deficit_timeline_sweep(n, t):
+    starts, durs, works, g = _rand(n, t, seed=n * 1000 + t)
+    got = np.asarray(deficit_timeline(jnp.asarray(starts),
+                                      jnp.asarray(starts + durs),
+                                      jnp.asarray(works), jnp.asarray(g)))
+    want = np.asarray(deficit_timeline_ref(jnp.asarray(starts),
+                                           jnp.asarray(starts + durs),
+                                           jnp.asarray(works),
+                                           jnp.asarray(g)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("n,t,mu", [(1, 64, 1), (17, 300, 5), (120, 900, 10),
+                                    (256, 512, 20), (300, 2048, 42)])
+def test_gain_scan_sweep(n, t, mu):
+    rng = np.random.default_rng(n + t + mu)
+    starts, durs, works, g = _rand(n, t, seed=n + t)
+    starts = np.minimum(starts, t - durs - 1)
+    power = np.asarray(deficit_timeline_ref(
+        jnp.asarray(starts), jnp.asarray(starts + durs), jnp.asarray(works),
+        jnp.asarray(np.zeros(t, np.float32))))
+    rem = (g - power).astype(np.float32)
+    lo = np.maximum(starts - rng.integers(0, 30, n), 0).astype(np.float32)
+    hi = np.minimum(starts + rng.integers(0, 30, n),
+                    t - durs).astype(np.float32)
+    got = np.asarray(gain_scan(jnp.asarray(rem), jnp.asarray(starts),
+                               jnp.asarray(durs), jnp.asarray(works),
+                               jnp.asarray(lo), jnp.asarray(hi), mu=mu))
+    want = np.asarray(gain_scan_ref(jnp.asarray(rem), jnp.asarray(starts),
+                                    jnp.asarray(durs), jnp.asarray(works),
+                                    jnp.asarray(lo), jnp.asarray(hi), mu=mu))
+    legal = want > -1e29
+    assert (legal == (got > -1e29)).all()
+    np.testing.assert_allclose(got[legal], want[legal], atol=1e-3)
+
+
+def test_kernel_cost_matches_core_oracle():
+    plat = make_cluster(1, seed=2)
+    wf = make_workflow("eager", 5, seed=4)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 1.4)
+    prof = generate_profile("S3", T, plat, J=12, seed=3)
+    start = asap_schedule(inst)
+    want = schedule_cost(inst, prof, start)
+    got = float(carbon_cost(start, inst.dur, inst.task_work,
+                            prof.unit_budget(inst.idle_total)))
+    assert abs(got - want) < 1e-3 * max(want, 1)
+
+
+def test_gain_kernel_on_real_instance():
+    plat = make_cluster(1, seed=5)
+    wf = make_workflow("methylseq", 4, seed=6)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 2.0)
+    prof = generate_profile("S1", T, plat, J=12, seed=3)
+    start = asap_schedule(inst)
+    rem = prof.unit_budget(inst.idle_total) - work_timeline(inst, T, start)
+    N = inst.num_tasks
+    lo = np.zeros(N)
+    hi = np.full(N, T) - inst.dur
+    gains = np.asarray(ls_gains(rem, start, inst.dur, inst.task_work,
+                                lo, hi, mu=6))
+    base = schedule_cost(inst, prof, start)
+    # applying any positive-gain single move must reduce the exact cost by
+    # exactly that gain
+    idx = np.argwhere(gains > 0)
+    for (v, d) in idx[:20]:
+        s2 = start.copy()
+        s2[v] += d - 6
+        c2 = schedule_cost(inst, prof, s2)
+        assert abs((base - c2) - gains[v, d]) < 1e-3
+
+
+@pytest.mark.parametrize("B,S,H,hd,causal,dtype", [
+    (2, 128, 2, 64, True, jnp.float32),
+    (1, 256, 4, 128, True, jnp.float32),
+    (2, 200, 2, 64, False, jnp.float32),     # non-multiple S (padding path)
+    (1, 384, 1, 128, True, jnp.bfloat16),
+    (1, 130, 3, 64, True, jnp.float32),
+])
+def test_flash_attention_sweep(B, S, H, hd, causal, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(B * S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd), dtype)
+    got = np.asarray(flash_attention(q, k, v, causal=causal), np.float32)
+    want = np.asarray(flash_attention_ref(q, k, v, causal=causal),
+                      np.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)

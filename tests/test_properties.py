@@ -1,0 +1,98 @@
+"""Hypothesis property tests on the scheduling system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import make_cluster
+from repro.core import (
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    schedule,
+    schedule_cost,
+    validate_schedule,
+)
+from repro.core.carbon import PowerProfile, cost_timeline
+from repro.core.heft import heft_mapping
+from repro.core.local_search import local_search
+from repro.workflows import layered_random
+
+
+def _instance(n, seed):
+    plat = make_cluster(1, seed=seed)
+    wf = layered_random(max(n, 4), 4, seed=seed)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    return plat, inst
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(5, 25), seed=st.integers(0, 1000),
+       scen=st.sampled_from(["S1", "S2", "S3", "S4"]),
+       factor=st.sampled_from([1.0, 1.5, 2.0]),
+       variant=st.sampled_from(
+           ["slack", "slackW", "pressR", "pressWR-LS", "slack-LS"]))
+def test_schedules_always_valid(n, seed, scen, factor, variant):
+    plat, inst = _instance(n, seed)
+    T = deadline_from_asap(inst, factor)
+    prof = generate_profile(scen, T, plat, J=8, seed=seed)
+    r = schedule(inst, prof, plat, variant)
+    validate_schedule(inst, prof, r.start)          # precedence + deadline
+    assert r.cost == schedule_cost(inst, prof, r.start)
+    assert r.cost == cost_timeline(inst, prof, r.start)  # oracle agreement
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(5, 20), seed=st.integers(0, 500),
+       mu=st.integers(1, 12))
+def test_local_search_never_increases_cost(n, seed, mu):
+    plat, inst = _instance(n, seed)
+    T = deadline_from_asap(inst, 1.7)
+    prof = generate_profile("S3", T, plat, J=8, seed=seed)
+    base = schedule(inst, prof, plat, "pressR").start
+    c0 = schedule_cost(inst, prof, base)
+    improved = local_search(inst, prof, plat, base, mu=mu)
+    validate_schedule(inst, prof, improved)
+    assert schedule_cost(inst, prof, improved) <= c0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), split=st.integers(1, 50))
+def test_cost_invariant_under_interval_refinement(seed, split):
+    """Splitting a profile interval (same budgets) cannot change the cost."""
+    plat, inst = _instance(12, seed)
+    T = deadline_from_asap(inst, 1.3)
+    prof = generate_profile("S2", T, plat, J=6, seed=seed)
+    start = schedule(inst, prof, plat, "asap").start
+    c0 = schedule_cost(inst, prof, start)
+    # refine: split each interval at an interior point
+    bounds = [int(prof.bounds[0])]
+    budget = []
+    for j in range(prof.J):
+        b, e = int(prof.bounds[j]), int(prof.bounds[j + 1])
+        mid = b + (split % max(e - b, 1))
+        if b < mid < e:
+            bounds += [mid, e]
+            budget += [int(prof.budget[j])] * 2
+        else:
+            bounds += [e]
+            budget += [int(prof.budget[j])]
+    prof2 = PowerProfile(bounds=np.asarray(bounds, dtype=np.int64),
+                         budget=np.asarray(budget, dtype=np.int64))
+    assert schedule_cost(inst, prof2, start) == c0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 300))
+def test_uniform_shift_into_identical_budget_is_neutral(seed):
+    """With a constant profile, shifting the whole schedule right by k
+    (within the horizon) keeps the carbon cost unchanged."""
+    plat, inst = _instance(10, seed)
+    D = deadline_from_asap(inst, 1.0)
+    T = D + 40
+    prof = PowerProfile(
+        bounds=np.asarray([0, T], dtype=np.int64),
+        budget=np.asarray([plat.idle_total + 100], dtype=np.int64))
+    start = schedule(inst, prof, plat, "asap").start
+    c0 = schedule_cost(inst, prof, start)
+    for k in (1, 7, 40):
+        if (start + inst.dur + k).max() <= T:
+            assert schedule_cost(inst, prof, start + k) == c0

@@ -1,0 +1,68 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Full pipeline: nf-core-like workflow -> HEFT mapping -> communication-
+enhanced instance -> power profiles -> all 16 CaWoSched variants + ASAP ->
+(small instances) ILP optimality gap, mirroring the paper's §6 protocol.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import make_cluster
+from repro.core import (
+    ALL_VARIANTS,
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    heft_mapping,
+    schedule,
+    schedule_cost,
+    validate_schedule,
+)
+from repro.core.ilp import solve_ilp
+from repro.workflows import WORKFLOW_KINDS, make_workflow, wfgen_scale
+
+
+def test_full_pipeline_all_kinds():
+    plat = make_cluster(1, seed=0)
+    for kind in WORKFLOW_KINDS:
+        wf = make_workflow(kind, 4, seed=1)
+        inst = build_instance(wf, heft_mapping(wf, plat), plat)
+        assert inst.num_tasks >= wf.n
+        T = deadline_from_asap(inst, 1.5)
+        prof = generate_profile("S3", T, plat, J=16, seed=2)
+        base = schedule(inst, prof, plat, "asap")
+        best = min(schedule(inst, prof, plat, v.name).cost
+                   for v in ALL_VARIANTS)
+        assert best <= base.cost
+
+
+def test_paper_protocol_small():
+    """ASAP is beaten on most instances; every variant is deadline-valid;
+    heuristics sit between ILP (lower bound) and ASAP on small instances."""
+    plat = make_cluster(1, seed=3)
+    wf = make_workflow("bacass", 2, seed=11)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 2.0)
+    prof = generate_profile("S1", T, plat, J=8, seed=4)
+    res = {v.name: schedule(inst, prof, plat, v.name) for v in ALL_VARIANTS}
+    base = schedule(inst, prof, plat, "asap")
+    for r in res.values():
+        validate_schedule(inst, prof, r.start)
+    ilp = solve_ilp(inst, prof, time_limit=180)
+    best = min(r.cost for r in res.values())
+    assert ilp.cost - 1e-6 <= best <= base.cost
+
+
+def test_scaling_instances():
+    """wfgen-scaled workflows build + schedule at 1k tasks quickly."""
+    plat = make_cluster(2, seed=0)          # 12 compute processors
+    wf = wfgen_scale("atacseq", 1000, seed=5)
+    assert 700 <= wf.n <= 1400
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, 1.5)
+    prof = generate_profile("S3", T, plat, J=48, seed=5)
+    r = schedule(inst, prof, plat, "pressWR-LS")
+    validate_schedule(inst, prof, r.start)
+    base = schedule(inst, prof, plat, "asap")
+    assert r.cost <= base.cost
+    assert r.seconds < 60
