@@ -1,5 +1,8 @@
 """Fig 4/5/6: cost ratio vs the ASAP baseline — medians (overall and per
-deadline factor) and boxplot statistics."""
+deadline factor) and boxplot statistics.
+
+Costs come from one ``schedule_portfolio`` pass per case (bit-identical to
+the per-variant loop; the asap baseline is the portfolio's free EST row)."""
 from __future__ import annotations
 
 import time

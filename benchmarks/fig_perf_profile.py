@@ -1,5 +1,8 @@
 """Fig 2/3: performance profiles (share of instances with ratio >= tau),
-overall and split by deadline factor."""
+overall and split by deadline factor.
+
+Costs come from one ``schedule_portfolio`` pass per case (bit-identical to
+the per-variant loop)."""
 from __future__ import annotations
 
 import time

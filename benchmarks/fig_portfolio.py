@@ -1,0 +1,90 @@
+"""Portfolio engine benchmark: seed-style per-variant loop vs one-pass
+``schedule_portfolio`` on the 17-algorithm matrix, machine-readable.
+
+Emits ``benchmarks/out/BENCH_portfolio.json``:
+  * ``loop_us_per_instance`` / ``portfolio_us_per_instance`` — live
+    measurements of the per-variant ``schedule()`` loop and the portfolio
+    engine on the same instances (identical results, tested);
+  * ``jax_fanout_us_per_instance`` — the vmapped device fan-out
+    (``engine="jax"``), greedy stage bit-identical, batched -LS rounds;
+  * ``seed_reference`` — the recorded wall clock of
+    ``run.py --only rank,runtime`` at the seed commit vs this one (the
+    acceptance trajectory; update SEED_REFERENCE when re-measuring on new
+    hardware — run that matrix at the seed commit in a scratch worktree).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    OUT_DIR,
+    build_matrix,
+    emit,
+    run_all_variants,
+    run_variant_loop,
+)
+
+# wall clock of `run.py --only rank,runtime` (scaled-down matrix, this
+# container), measured at the seed commit and after this PR's engine landed.
+SEED_REFERENCE = {
+    "matrix": "run.py --only rank,runtime (sizes=(200,)/(200,1000))",
+    "seed_commit_seconds": 237.7,     # measured at seed commit, 1-CPU box
+    "this_commit_seconds": 46.8,      # same box, portfolio engine (5.1x)
+}
+
+
+def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
+        with_jax: bool = True):
+    cases = []
+    for case in build_matrix(sizes=sizes, clusters=clusters,
+                             factors=(1.0, 2.0), scenarios=("S1", "S3")):
+        cases.append(case)
+        if len(cases) >= n_cases:
+            break
+
+    t0 = time.perf_counter()
+    loop_res = [run_variant_loop(c) for c in cases]
+    t_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    port_res = [run_all_variants(c) for c in cases]
+    t_port = time.perf_counter() - t0
+
+    for lr, pr in zip(loop_res, port_res):     # engine must be bit-identical
+        for v, (cost, _) in lr.items():
+            assert pr[v][0] == cost, v
+
+    t_jax = None
+    if with_jax:
+        t0 = time.perf_counter()
+        for c in cases:
+            run_all_variants(c, engine="jax")
+        t_jax = time.perf_counter() - t0
+
+    n = len(cases)
+    payload = {
+        "n_instances": n,
+        "variants_per_instance": 17,
+        "loop_us_per_instance": t_loop / n * 1e6,
+        "portfolio_us_per_instance": t_port / n * 1e6,
+        "speedup_loop_over_portfolio": t_loop / t_port,
+        "jax_fanout_us_per_instance": (t_jax / n * 1e6) if t_jax else None,
+        "seed_reference": dict(SEED_REFERENCE),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out_path = os.path.join(OUT_DIR, "BENCH_portfolio.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    emit("portfolio_engine", t_port / n * 1e6,
+         f"loop/portfolio={t_loop / t_port:.2f}x"
+         f";jax_us={payload['jax_fanout_us_per_instance'] or 0:.0f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

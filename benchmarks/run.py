@@ -16,12 +16,13 @@ def main() -> None:
                     help="paper-scale matrix (34 workflows, 72/144 nodes)")
     ap.add_argument("--only", default=None,
                     help="comma list: rank,profile,ratio,ls,ilp,runtime,"
-                         "roofline")
+                         "roofline,portfolio")
     args = ap.parse_args()
 
     sizes = (200, 1000) if args.full else (200,)
     clusters = ("small-full", "large-full") if args.full else ("small",)
-    want = set((args.only or "rank,profile,ratio,ls,ilp,runtime,roofline"
+    want = set((args.only or
+                "rank,profile,ratio,ls,ilp,runtime,roofline,portfolio"
                 ).split(","))
 
     print("name,us_per_call,derived")
@@ -46,6 +47,9 @@ def main() -> None:
     if "roofline" in want:
         from benchmarks.roofline_table import run as r7
         r7()
+    if "portfolio" in want:
+        from benchmarks.fig_portfolio import run as r8
+        r8(sizes=(200,), clusters=("small",))
 
 
 if __name__ == "__main__":

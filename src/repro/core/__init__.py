@@ -18,3 +18,9 @@ from repro.core.carbon import (  # noqa: F401
 from repro.core.dag import FixedMapping, Instance, build_instance, trivial_mapping  # noqa: F401
 from repro.core.estlst import asap_schedule, compute_est, compute_lst, makespan  # noqa: F401
 from repro.core.heft import heft_mapping  # noqa: F401
+from repro.core.portfolio import (  # noqa: F401
+    PORTFOLIO_VARIANTS,
+    PreparedInstance,
+    prepare_instance,
+    schedule_portfolio,
+)

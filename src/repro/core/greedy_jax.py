@@ -1,15 +1,28 @@
 """Device-path greedy: the paper's §5.2 loop as a single ``lax.scan``.
 
 Semantically identical to ``core.greedy.greedy_schedule`` (same score order,
-same max-budget/earliest-tie placement, same dynamic splits): the scan state
-is (remaining per-unit budget, candidate mask, EST, LST); each step places
-one task and re-relaxes EST/LST over the precomputed topological levels with
-placed tasks pinned (the fixpoint equals the reference's worklist update).
+same max-budget/earliest-tie placement, same dynamic splits, same endpoint
+rule: a task end ``e`` becomes a candidate point only when ``e <= T``): the
+scan state is (remaining per-unit budget, candidate mask, EST, LST); each
+step places one task and re-relaxes EST/LST over the precomputed topological
+levels with placed tasks pinned (the fixpoint equals the reference's
+worklist update).
+
+The scan core is *vmappable over the variant axis*: score orders and
+candidate masks become batched inputs while the instance tensors (durations,
+work powers, level buckets, budget timeline) are shared, so one jitted call
+produces the whole 16-variant portfolio (``greedy_fanout_jax``) — and a
+second vmap level runs shape-bucketed instance batches
+(``repro.core.portfolio.portfolio_starts_batch``, via ``_impl()["batch"]``).
+``repro.core.portfolio`` builds the batched inputs from a
+:class:`~repro.core.portfolio.PreparedInstance`.
 
 Intended for on-device replanning (CarbonGate-scale instances, N ~ 10^2-10^3,
 T ~ 10^3-10^4); the numpy path remains the big-instance scheduler.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -48,14 +61,104 @@ def _level_buckets(inst: Instance):
     return fwd, rev
 
 
+# Argument order of the scan core; the first _N_SHARED are per-instance
+# tensors shared by every variant, the rest carry the variant axis when
+# vmapped (rem0/est0/lst0 stay shared on the variant axis, batched on the
+# instance axis).
+_N_SHARED = 8
+
+
+@functools.lru_cache(maxsize=1)
+def _impl():
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def greedy_scan(dur, work, eu, ev, eok, fu, fv, fok,
+                    rem0, mask0, est0, lst0, order):
+        """One variant's §5.2 greedy over precomputed inputs (vmappable)."""
+        T = rem0.shape[0]
+        tgrid = jnp.arange(T, dtype=jnp.int32)
+        pgrid = jnp.arange(T + 1, dtype=jnp.int32)
+        big = jnp.int32(np.iinfo(np.int32).max // 4)
+
+        def relax(est, lst, placed, start):
+            est = jnp.where(placed, start, est)
+            lst = jnp.where(placed, start, lst)
+
+            def fwd(e, args):
+                uu, vv, ok = args
+                cand = jnp.where(ok, e[uu] + dur[uu], 0)
+                return e.at[vv].max(cand), None
+
+            est, _ = lax.scan(fwd, est, (eu, ev, eok))
+
+            def bwd(l, args):
+                uu, vv, ok = args
+                cand = jnp.where(ok, l[vv] - dur[uu], big)
+                return l.at[uu].min(cand), None
+
+            lst, _ = lax.scan(bwd, lst, (fu, fv, fok))
+            est = jnp.where(placed, start, est)
+            lst = jnp.where(placed, start, lst)
+            return est, lst
+
+        def step(state, v):
+            rem, mask, est, lst, placed, start = state
+            feas = mask[:-1] & (pgrid[:-1] >= est[v]) & (pgrid[:-1] <= lst[v])
+            any_f = feas.any()
+            val = jnp.where(feas, rem, jnp.int32(-(1 << 30)))
+            s = jnp.where(any_f, jnp.argmax(val).astype(jnp.int32),
+                          est[v].astype(jnp.int32))
+            e = s + dur[v]
+            run = (tgrid >= s) & (tgrid < e)
+            rem = rem - jnp.where(run, work[v], 0).astype(rem.dtype)
+            mask = mask.at[s].set(True)
+            # numpy endpoint rule: e splits an interval only when e <= T; an
+            # overrunning task must not spuriously mark T a candidate point.
+            eidx = jnp.minimum(e, T)
+            mask = mask.at[eidx].set(mask[eidx] | (e <= T))
+            placed = placed.at[v].set(True)
+            start = start.at[v].set(s)
+            est, lst = relax(est, lst, placed, start)
+            return (rem, mask, est, lst, placed, start), None
+
+        N = est0.shape[0]
+        state0 = (rem0, mask0, est0, lst0,
+                  jnp.zeros(N, bool), jnp.zeros(N, jnp.int32))
+        (_, _, _, _, _, start), _ = lax.scan(step, state0, order)
+        return start
+
+    variant_axes = (None,) * _N_SHARED + (None, 0, None, None, 0)
+    fanout = jax.vmap(greedy_scan, in_axes=variant_axes)
+    return {
+        "single": jax.jit(greedy_scan),
+        "fanout": jax.jit(fanout),
+        "batch": jax.jit(jax.vmap(fanout, in_axes=(0,) * 13)),
+    }
+
+
+def _device_inputs(inst: Instance, profile: PowerProfile, est0, lst0,
+                   buckets=None):
+    """Shared per-instance device tensors (jnp), from host precompute."""
+    import jax.numpy as jnp
+
+    (eu, ev, eok), (fu, fv, fok) = buckets or _level_buckets(inst)
+    return (jnp.asarray(inst.dur, jnp.int32),
+            jnp.asarray(inst.task_work, jnp.int32),
+            jnp.asarray(eu), jnp.asarray(ev), jnp.asarray(eok),
+            jnp.asarray(fu), jnp.asarray(fv), jnp.asarray(fok),
+            jnp.asarray(profile.unit_budget(inst.idle_total)
+                        .astype(np.int32)),
+            jnp.asarray(est0, jnp.int32), jnp.asarray(lst0, jnp.int32))
+
+
 def greedy_schedule_jax(inst: Instance, profile: PowerProfile,
                         platform: Platform, score: str = "press",
                         weighted: bool = False, refined: bool = False,
                         k: int = 3):
     """Jittable greedy; returns start times (jnp int32 [N])."""
-    import jax
     import jax.numpy as jnp
-    from jax import lax
 
     T = profile.T
     est0 = compute_est(inst)
@@ -64,60 +167,27 @@ def greedy_schedule_jax(inst: Instance, profile: PowerProfile,
         raise ValueError("infeasible: deadline below ASAP makespan")
     order = task_order(inst, est0, lst0, score, weighted, platform)
     mask0 = candidate_mask(inst, profile, refined=refined, k=k)
-    rem0 = profile.unit_budget(inst.idle_total).astype(np.int32)
-    (eu, ev, eok), (fu, fv, fok) = _level_buckets(inst)
+    (dur, work, eu, ev, eok, fu, fv, fok, rem0, est_j, lst_j) = \
+        _device_inputs(inst, profile, est0, lst0)
+    return _impl()["single"](dur, work, eu, ev, eok, fu, fv, fok,
+                             rem0, jnp.asarray(mask0), est_j, lst_j,
+                             jnp.asarray(order, jnp.int32))
 
-    dur = jnp.asarray(inst.dur, jnp.int32)
-    work = jnp.asarray(inst.task_work, jnp.int32)
-    tgrid = jnp.arange(T, dtype=jnp.int32)
-    pgrid = jnp.arange(T + 1, dtype=jnp.int32)
-    big = jnp.int32(np.iinfo(np.int32).max // 4)
 
-    eu_j, ev_j, eok_j = map(jnp.asarray, (eu, ev, eok))
-    fu_j, fv_j, fok_j = map(jnp.asarray, (fu, fv, fok))
+def greedy_fanout_jax(inst: Instance, profile: PowerProfile, est0, lst0,
+                      masks: np.ndarray, orders: np.ndarray, buckets=None):
+    """All variants of one instance in one jitted vmapped scan.
 
-    def relax(est, lst, placed, start):
-        est = jnp.where(placed, start, est)
-        lst = jnp.where(placed, start, lst)
+    Args:
+      masks:  bool [V, T+1] per-variant candidate masks.
+      orders: int  [V, N] per-variant score orders.
+    Returns:
+      int32 [V, N] start times.
+    """
+    import jax.numpy as jnp
 
-        def fwd(e, args):
-            uu, vv, ok = args
-            cand = jnp.where(ok, e[uu] + dur[uu], 0)
-            return e.at[vv].max(cand), None
-
-        est, _ = lax.scan(fwd, est, (eu_j, ev_j, eok_j))
-
-        def bwd(l, args):
-            uu, vv, ok = args
-            cand = jnp.where(ok, l[vv] - dur[uu], big)
-            return l.at[uu].min(cand), None
-
-        lst, _ = lax.scan(bwd, lst, (fu_j, fv_j, fok_j))
-        est = jnp.where(placed, start, est)
-        lst = jnp.where(placed, start, lst)
-        return est, lst
-
-    def step(state, v):
-        rem, mask, est, lst, placed, start = state
-        feas = mask[:-1] & (pgrid[:-1] >= est[v]) & (pgrid[:-1] <= lst[v])
-        any_f = feas.any()
-        val = jnp.where(feas, rem, jnp.int32(-(1 << 30)))
-        s = jnp.where(any_f, jnp.argmax(val).astype(jnp.int32),
-                      est[v].astype(jnp.int32))
-        e = s + dur[v]
-        run = (tgrid >= s) & (tgrid < e)
-        rem = rem - jnp.where(run, work[v], 0).astype(rem.dtype)
-        mask = mask.at[s].set(True)
-        mask = mask.at[jnp.minimum(e, T)].set(True)
-        placed = placed.at[v].set(True)
-        start = start.at[v].set(s)
-        est, lst = relax(est, lst, placed, start)
-        return (rem, mask, est, lst, placed, start), None
-
-    state0 = (jnp.asarray(rem0), jnp.asarray(mask0),
-              jnp.asarray(est0, jnp.int32), jnp.asarray(lst0, jnp.int32),
-              jnp.zeros(inst.num_tasks, bool),
-              jnp.zeros(inst.num_tasks, jnp.int32))
-    (rem, mask, est, lst, placed, start), _ = jax.lax.scan(
-        step, state0, jnp.asarray(order, jnp.int32))
-    return start
+    (dur, work, eu, ev, eok, fu, fv, fok, rem0, est_j, lst_j) = \
+        _device_inputs(inst, profile, est0, lst0, buckets)
+    return _impl()["fanout"](dur, work, eu, ev, eok, fu, fv, fok,
+                             rem0, jnp.asarray(masks), est_j, lst_j,
+                             jnp.asarray(orders, jnp.int32))

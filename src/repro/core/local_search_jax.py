@@ -7,6 +7,12 @@ commit proposals in gain order with exact re-evaluation (`move_gain`) —
 re-evaluation is O(mu) per move, so commits are cheap while the O(N*mu*W)
 sweep runs on device. Cost is monotonically non-increasing, like the paper's
 hill climber; tests check both climbers against each other.
+
+:func:`local_search_portfolio` is the portfolio engine's variant: the hill
+climbs of ALL ``-LS`` variants advance together, one
+``kernels.gain_scan_batched`` launch per round for the whole [V, N, 2mu+1]
+gain tensor (instead of V launches), with per-variant exact commits;
+variants that converge early are frozen in place until the rest finish.
 """
 from __future__ import annotations
 
@@ -15,63 +21,111 @@ import numpy as np
 from repro.core.carbon import PowerProfile, work_timeline
 from repro.core.dag import Instance
 from repro.core.local_search import apply_move, dyn_bounds, move_gain
-from repro.kernels.ops import ls_gains
+from repro.core.local_search import dyn_bounds_all as _dyn_windows
+from repro.kernels.ops import ls_gains, ls_gains_batched
+
+
+def _commit_round(inst, T, rem, start, gains, mu) -> bool:
+    """Commit this round's kernel proposals in gain order, exactly."""
+    dur = inst.dur
+    work = inst.task_work
+    best_delta = np.argmax(gains, axis=1) - mu
+    best_gain = gains.max(axis=1)
+    cand = np.flatnonzero(best_gain > 0)
+    committed = False
+    for v in cand[np.argsort(-best_gain[cand], kind="stable")]:
+        v = int(v)
+        s = int(start[v])
+        e = s + int(dur[v])
+        new_s = s + int(best_delta[v])
+        dlo, dhi = dyn_bounds(inst, start, v, T)
+        new_s = min(max(new_s, dlo), dhi)
+        if new_s == s or dlo > dhi:
+            continue
+        g = move_gain(rem, s, e, new_s, int(work[v]))
+        if g <= 0:
+            continue
+        apply_move(rem, s, e, new_s, int(work[v]))
+        start[v] = new_s
+        committed = True
+    return committed
 
 
 def local_search_batched(inst: Instance, profile: PowerProfile,
                          start: np.ndarray, mu: int = 10,
                          max_rounds: int = 200,
-                         interpret: bool = True) -> np.ndarray:
+                         interpret: bool | None = None) -> np.ndarray:
     T = profile.T
     start = np.asarray(start, dtype=np.int64).copy()
     rem = (profile.unit_budget(inst.idle_total)
            - work_timeline(inst, T, start)).astype(np.int64)
-    N = inst.num_tasks
     dur = inst.dur
     work = inst.task_work
+    N = inst.num_tasks
 
     # edge arrays for vectorized dynamic bounds
-    v_of_pred = np.repeat(np.arange(N), np.diff(inst.pred_ptr))
-    u_pred = inst.pred_idx
-    u_of_succ = np.repeat(np.arange(N), np.diff(inst.succ_ptr))
-    v_succ = inst.succ_idx
+    edges = (np.repeat(np.arange(N), np.diff(inst.pred_ptr)), inst.pred_idx,
+             np.repeat(np.arange(N), np.diff(inst.succ_ptr)), inst.succ_idx)
 
     for _ in range(max_rounds):
-        # dynamic legal start-time windows from the *current* schedule
-        lo = np.zeros(N, dtype=np.int64)
-        np.maximum.at(lo, v_of_pred, start[u_pred] + dur[u_pred])
-        hi = np.full(N, np.iinfo(np.int64).max // 4, dtype=np.int64)
-        np.minimum.at(hi, u_of_succ, start[v_succ])
-        hi = np.minimum(hi - dur, T - dur)
-
+        lo, hi = _dyn_windows(start, dur, T, edges)
         gains = np.asarray(ls_gains(
             rem.astype(np.float32), start.astype(np.float32),
             dur.astype(np.float32), work.astype(np.float32),
             lo.astype(np.float32), hi.astype(np.float32),
             mu=mu, interpret=interpret))
-
-        best_delta = np.argmax(gains, axis=1) - mu
-        best_gain = gains.max(axis=1)
-        cand = np.flatnonzero(best_gain > 0)
-        if len(cand) == 0:
-            return start
-        # commit in gain order; every commit re-validated exactly
-        committed = False
-        for v in cand[np.argsort(-best_gain[cand], kind="stable")]:
-            v = int(v)
-            s = int(start[v])
-            e = s + int(dur[v])
-            new_s = s + int(best_delta[v])
-            dlo, dhi = dyn_bounds(inst, start, v, T)
-            new_s = min(max(new_s, dlo), dhi)
-            if new_s == s or dlo > dhi:
-                continue
-            g = move_gain(rem, s, e, new_s, int(work[v]))
-            if g <= 0:
-                continue
-            apply_move(rem, s, e, new_s, int(work[v]))
-            start[v] = new_s
-            committed = True
-        if not committed:
+        if not _commit_round(inst, T, rem, start, gains, mu):
             return start
     return start
+
+
+def local_search_portfolio(inst: Instance, profile: PowerProfile,
+                           starts: np.ndarray, mu: int = 10,
+                           max_rounds: int = 200,
+                           interpret: bool | None = None,
+                           ctx: dict | None = None) -> np.ndarray:
+    """Hill-climb a whole portfolio of schedules of one instance at once.
+
+    Args:
+      starts: int [V, N] — one greedy schedule per ``-LS`` variant.
+    Returns:
+      int64 [V, N] improved schedules; each row's cost is monotonically
+      non-increasing over rounds (same climber as
+      :func:`local_search_batched`, fanned out over the variant axis with a
+      single batched kernel launch per round).
+    """
+    T = profile.T
+    starts = np.asarray(starts, dtype=np.int64).copy()
+    V, N = starts.shape
+    dur = inst.dur
+    work = inst.task_work
+    if ctx is not None:
+        unit_budget = ctx["unit_budget"]
+        edges = ctx["edges"]
+    else:
+        unit_budget = profile.unit_budget(inst.idle_total).astype(np.int64)
+        edges = (np.repeat(np.arange(N), np.diff(inst.pred_ptr)),
+                 inst.pred_idx,
+                 np.repeat(np.arange(N), np.diff(inst.succ_ptr)),
+                 inst.succ_idx)
+    rems = np.stack([unit_budget - work_timeline(inst, T, starts[i])
+                     for i in range(V)])
+    active = np.ones(V, dtype=bool)
+
+    for _ in range(max_rounds):
+        lo = np.empty((V, N), dtype=np.int64)
+        hi = np.empty((V, N), dtype=np.int64)
+        for i in range(V):
+            lo[i], hi[i] = _dyn_windows(starts[i], dur, T, edges)
+        gains = np.asarray(ls_gains_batched(
+            rems.astype(np.float32), starts.astype(np.float32),
+            dur.astype(np.float32), work.astype(np.float32),
+            lo.astype(np.float32), hi.astype(np.float32),
+            mu=mu, interpret=interpret))
+        for i in range(V):
+            if active[i]:
+                active[i] = _commit_round(inst, T, rems[i], starts[i],
+                                          gains[i], mu)
+        if not active.any():
+            break
+    return starts

@@ -1,0 +1,255 @@
+"""Portfolio scheduling engine: every CaWoSched variant of an instance in
+one pass (paper §6's 17-algorithm experimental matrix as a single call).
+
+The per-variant :func:`repro.core.cawosched.schedule` entry point pays the
+shared per-instance work — EST/LST, candidate masks, score orders, the
+budget timeline, local-search adjacency — once *per variant*. This engine
+amortizes it once *per instance* and fans the variants out:
+
+* :class:`PreparedInstance` — the amortized precompute. Contract: every
+  field is a pure function of ``(inst, profile, platform, k)`` and is never
+  mutated by the schedulers (greedy runs copy EST/LST internally; local
+  search copies the budget timeline), so one object is shared by all 16
+  variants, by local search, and by the jax fan-out, and may be cached
+  across repeated ``schedule_portfolio`` calls.
+* :func:`schedule_portfolio` — the numpy engine. Bit-identical to looping
+  ``schedule()`` over variants (tests assert equality): the 8 unique greedy
+  configurations run once each on the segment-list fast path
+  (:func:`repro.core.greedy.greedy_core_segments`) and are shared by their
+  plain and ``-LS`` variants; each ``-LS`` variant then runs the exact
+  sequential local search with the shared :func:`ls_context`.
+* ``engine="jax"`` — device fan-out: one jitted vmapped ``lax.scan``
+  produces all greedy variants (:func:`repro.core.greedy_jax
+  .greedy_fanout_jax`), and all ``-LS`` hill climbs advance together with
+  ONE batched gain-kernel launch per round
+  (:func:`repro.core.local_search_jax.local_search_portfolio`). Greedy
+  starts are bit-identical to numpy; the batched hill climb is monotone but
+  commits moves in gain order, so ``-LS`` costs may differ from the
+  sequential reference.
+* :func:`portfolio_starts_batch` — shape-bucketed instance batching: the
+  scan core vmaps a second time over instances whose padded shapes match,
+  so one jitted call schedules a whole bucket x all variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.cluster import Platform
+from repro.core.carbon import PowerProfile, schedule_cost, validate_schedule
+from repro.core.cawosched import ALL_VARIANTS, VARIANTS_BY_NAME, \
+    ScheduleResult
+from repro.core.dag import Instance
+from repro.core.estlst import compute_est, compute_lst
+from repro.core.greedy import adjacency_lists, greedy_core_segments, \
+    segment_state
+from repro.core.local_search import local_search, ls_context
+from repro.core.scores import task_order
+from repro.core.subdivide import candidate_mask
+
+PORTFOLIO_VARIANTS: tuple[str, ...] = \
+    ("asap",) + tuple(v.name for v in ALL_VARIANTS)
+
+# the 8 unique greedy configurations behind the 16 variants
+_COMBOS: tuple[tuple[str, bool, bool], ...] = tuple(
+    (s, w, r) for s in ("slack", "press") for w in (False, True)
+    for r in (False, True))
+
+
+@dataclasses.dataclass
+class PreparedInstance:
+    """Amortized per-(instance, profile, platform, k) scheduling state."""
+
+    inst: Instance
+    profile: PowerProfile
+    platform: Platform
+    k: int
+    est0: np.ndarray                  # [N] EST  (== the ASAP schedule)
+    lst0: np.ndarray                  # [N] LST
+    feasible: bool                    # est0 <= lst0 everywhere
+    orders: dict                      # (score, weighted) -> int64 [N]
+    masks: dict                       # refined -> bool [T+1] candidate mask
+    segs: dict                        # refined -> (pts0, vals0) segment state
+    adj: tuple                        # (succ_lists, pred_lists)
+    ls: dict                          # ls_context() shared by -LS variants
+    _buckets: tuple | None = None     # lazy level buckets (jax fan-out)
+
+    def buckets(self):
+        if self._buckets is None:
+            from repro.core.greedy_jax import _level_buckets
+            self._buckets = _level_buckets(self.inst)
+        return self._buckets
+
+
+def prepare_instance(inst: Instance, profile: PowerProfile,
+                     platform: Platform, k: int = 3) -> PreparedInstance:
+    """Run the shared precompute once; see :class:`PreparedInstance`."""
+    T = profile.T
+    est0 = compute_est(inst)
+    lst0 = compute_lst(inst, T)
+    feasible = bool((est0 <= lst0).all())
+    orders = {}
+    if feasible:
+        for score in ("slack", "press"):
+            for weighted in (False, True):
+                orders[(score, weighted)] = task_order(
+                    inst, est0, lst0, score, weighted, platform)
+    masks = {r: candidate_mask(inst, profile, refined=r, k=k)
+             for r in (False, True)}
+    segs = {r: segment_state(inst, profile, refined=r, k=k)
+            for r in (False, True)}
+    return PreparedInstance(
+        inst=inst, profile=profile, platform=platform, k=k,
+        est0=est0, lst0=lst0, feasible=feasible, orders=orders,
+        masks=masks, segs=segs, adj=adjacency_lists(inst),
+        ls=ls_context(inst, profile, platform))
+
+
+def _greedy_starts_numpy(prep: PreparedInstance, combos) -> dict:
+    """One segment-greedy run per unique (score, weighted, refined)."""
+    out = {}
+    for (score, weighted, refined) in combos:
+        t0 = time.perf_counter()
+        pts0, vals0 = prep.segs[refined]
+        start = greedy_core_segments(
+            prep.inst, prep.profile.T, prep.est0, prep.lst0,
+            prep.orders[(score, weighted)], pts0, vals0, prep.adj)
+        out[(score, weighted, refined)] = (start, time.perf_counter() - t0)
+    return out
+
+
+def _greedy_starts_jax(prep: PreparedInstance, combos) -> dict:
+    """All unique greedy configurations in one vmapped device call."""
+    from repro.core.greedy_jax import greedy_fanout_jax
+
+    t0 = time.perf_counter()
+    masks = np.stack([prep.masks[r] for (_, _, r) in combos])
+    orders = np.stack([prep.orders[(s, w)] for (s, w, _) in combos])
+    starts = np.asarray(greedy_fanout_jax(
+        prep.inst, prep.profile, prep.est0, prep.lst0, masks, orders,
+        prep.buckets()), dtype=np.int64)
+    dt = (time.perf_counter() - t0) / max(len(combos), 1)
+    return {c: (starts[i], dt) for i, c in enumerate(combos)}
+
+
+def schedule_portfolio(inst: Instance, profile: PowerProfile,
+                       platform: Platform, variants=None, k: int = 3,
+                       mu: int = 10, validate: bool = True,
+                       engine: str = "numpy",
+                       prep: PreparedInstance | None = None
+                       ) -> dict[str, ScheduleResult]:
+    """Schedule all requested variants (default: asap + all 16) in one pass.
+
+    ``engine="numpy"`` is bit-identical to the per-variant ``schedule()``
+    loop; ``engine="jax"`` fans the greedy out on device and batches the
+    local-search rounds (monotone, but ``-LS`` results may differ from the
+    sequential reference). ``prep`` may be passed to reuse the precompute
+    across calls (it must match ``(inst, profile, platform, k)``).
+    """
+    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
+    if prep is None:
+        prep = prepare_instance(inst, profile, platform, k=k)
+    if not prep.feasible and any(n != "asap" for n in names):
+        raise ValueError("infeasible: deadline below ASAP makespan")
+
+    need = []
+    for name in names:
+        if name == "asap":
+            continue
+        v = VARIANTS_BY_NAME[name]
+        key = (v.score, v.weighted, v.refined)
+        if key not in need:
+            need.append(key)
+    if engine == "numpy":
+        greedy = _greedy_starts_numpy(prep, need)
+    elif engine == "jax":
+        greedy = _greedy_starts_jax(prep, need) if need else {}
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    out: dict[str, ScheduleResult] = {}
+    ls_names = [n for n in names
+                if n != "asap" and VARIANTS_BY_NAME[n].ls]
+    ls_done: dict[str, tuple[np.ndarray, float]] = {}
+    if engine == "jax" and ls_names:
+        from repro.core.local_search_jax import local_search_portfolio
+        t0 = time.perf_counter()
+        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
+        stack = np.stack([greedy[(v.score, v.weighted, v.refined)][0]
+                          for v in keys])
+        improved = local_search_portfolio(inst, profile, stack, mu=mu,
+                                          ctx=prep.ls)
+        dt = (time.perf_counter() - t0) / len(ls_names)
+        ls_done = {n: (improved[i], dt) for i, n in enumerate(ls_names)}
+
+    for name in names:
+        if name == "asap":
+            t0 = time.perf_counter()
+            start = prep.est0.copy()
+            secs = time.perf_counter() - t0
+        else:
+            v = VARIANTS_BY_NAME[name]
+            start, secs = greedy[(v.score, v.weighted, v.refined)]
+            if v.ls:
+                if name in ls_done:
+                    ls_start, ls_secs = ls_done[name]
+                    start, secs = ls_start, secs + ls_secs
+                else:
+                    t0 = time.perf_counter()
+                    start = local_search(inst, profile, platform, start,
+                                         mu=mu, ctx=prep.ls)
+                    secs += time.perf_counter() - t0
+        if validate:
+            validate_schedule(inst, profile, start)
+        out[name] = ScheduleResult(
+            variant=name, start=start,
+            cost=schedule_cost(inst, profile, start), seconds=secs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketed instance batching (jax engine, second vmap level)
+# ---------------------------------------------------------------------------
+
+def _shape_key(prep: PreparedInstance) -> tuple:
+    (eu, _, _), (fu, _, _) = prep.buckets()
+    return (prep.inst.num_tasks, prep.profile.T, eu.shape, fu.shape)
+
+
+def portfolio_starts_batch(preps: list[PreparedInstance],
+                           combos=_COMBOS) -> list[np.ndarray]:
+    """Greedy starts for a batch of instances x all variants on device.
+
+    Instances are grouped by padded shape key (N, T, level-bucket shapes);
+    each group runs as ONE doubly-vmapped jitted call. Returns, aligned with
+    ``preps``, int64 arrays of shape [len(combos), N].
+    """
+    import jax.numpy as jnp
+
+    from repro.core.greedy_jax import _device_inputs, _impl
+
+    results: list[np.ndarray | None] = [None] * len(preps)
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(preps):
+        groups.setdefault(_shape_key(p), []).append(i)
+    for idx in groups.values():
+        rows = []
+        for i in idx:
+            p = preps[i]
+            shared = _device_inputs(p.inst, p.profile, p.est0, p.lst0,
+                                    p.buckets())
+            masks = jnp.asarray(np.stack(
+                [p.masks[r] for (_, _, r) in combos]))
+            orders = jnp.asarray(np.stack(
+                [p.orders[(s, w)] for (s, w, _) in combos]), jnp.int32)
+            (dur, work, eu, ev, eok, fu, fv, fok, rem0, est_j, lst_j) = shared
+            rows.append((dur, work, eu, ev, eok, fu, fv, fok,
+                         rem0, masks, est_j, lst_j, orders))
+        stacked = tuple(jnp.stack([r[a] for r in rows])
+                        for a in range(13))
+        starts = np.asarray(_impl()["batch"](*stacked), dtype=np.int64)
+        for b, i in enumerate(idx):
+            results[i] = starts[b]
+    return results

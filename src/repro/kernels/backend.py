@@ -1,0 +1,16 @@
+"""Backend auto-detection for the Pallas kernels.
+
+``interpret=None`` (the default everywhere) resolves to "interpret exactly
+when the JAX default backend is CPU": the container runs the kernels through
+the Pallas interpreter, while on a TPU runtime the same call sites compile
+to Mosaic with no caller changes.
+"""
+from __future__ import annotations
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` flag against the active backend."""
+    if interpret is None:
+        import jax
+        return jax.default_backend() == "cpu"
+    return bool(interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 TIME_TILE = 512
 TASK_CHUNK = 512
 
@@ -51,7 +53,8 @@ def _kernel(starts_ref, ends_ref, works_ref, g_ref, t0_ref, out_ref, acc_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def deficit_timeline(starts, ends, works, g_eff, *, interpret: bool = True):
+def deficit_timeline(starts, ends, works, g_eff, *,
+                     interpret: bool | None = None):
     """Per-unit deficit (cost) timeline.
 
     Args:
@@ -59,9 +62,11 @@ def deficit_timeline(starts, ends, works, g_eff, *, interpret: bool = True):
         with zero-length windows (start == end) — they contribute nothing.
       g_eff: f32[T] effective green budget per unit; T padded to TIME_TILE
         (pad with +inf so padding units cost 0).
+      interpret: None = auto (interpret iff the backend is CPU).
     Returns:
       f32[T] with ``max(power(t) - g_eff(t), 0)``.
     """
+    interpret = resolve_interpret(interpret)
     (n,) = starts.shape
     (T,) = g_eff.shape
     n_pad = -n % TASK_CHUNK

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 BQ = 128
 BK = 128
 NEG = -1e30
@@ -79,12 +81,14 @@ def _kernel(scale: float, seq: int, causal: bool,
 @functools.partial(jax.jit,
                    static_argnames=("causal", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Fused attention. q/k/v: [B, S, H, hd] (kv heads already expanded).
 
     Returns [B, S, H, hd]. S is padded to the block size internally; padded
-    keys are masked, padded queries are sliced off.
+    keys are masked, padded queries are sliced off. ``interpret=None`` = auto
+    (interpret iff the backend is CPU).
     """
+    interpret = resolve_interpret(interpret)
     B, S, H, hd = q.shape
     assert k.shape == v.shape == (B, S, H, hd)
     scale = hd ** -0.5

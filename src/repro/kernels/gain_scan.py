@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 TASK_TILE = 256
 W = 128          # lane-aligned window length; supports mu <= 42
 NEG = -1e30
@@ -84,7 +86,7 @@ def _kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref, hi_ref,
 
 @functools.partial(jax.jit, static_argnames=("mu", "interpret"))
 def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """All-pairs (task, shift) gains.
 
     Args:
@@ -92,13 +94,13 @@ def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
       start, dur, work: f32[N].
       lo, hi: f32[N] legal *absolute* start-time bounds per task.
       mu: max shift.
+      interpret: None = auto (interpret iff the backend is CPU).
     Returns:
       f32[N, 2*mu+1]; entry (i, d) = gain of moving task i by (d - mu);
       illegal moves = -1e30.
     """
-    assert mu <= (W // 2) - 22, f"mu={mu} too large for W={W}"
+    interpret = resolve_interpret(interpret)
     (n,) = start.shape
-    n_pad = -n % TASK_TILE
     t_total = rem.shape[0]
 
     # lane-aligned windows around start and end (wrapper-side gather)
@@ -108,6 +110,15 @@ def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
     e_i = (start + dur).astype(jnp.int32)
     win_s = rem_pad[jnp.clip(s_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
     win_e = rem_pad[jnp.clip(e_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
+    return _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi,
+                              mu=mu, interpret=interpret)
+
+
+def _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi, *, mu, interpret):
+    """One pallas launch over pre-gathered (N, W) timeline windows."""
+    assert mu <= (W // 2) - 22, f"mu={mu} too large for W={W}"
+    (n,) = start.shape
+    n_pad = -n % TASK_TILE
 
     def pad2(x, v=0.0):
         return jnp.pad(x, ((0, n_pad), (0, 0)), constant_values=v)
@@ -138,3 +149,41 @@ def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
         interpret=interpret,
     )(win_s, win_e, w2, dur2, lo2, hi2)
     return out[:n, :2 * mu + 1]
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "interpret"))
+def gain_scan_batched(rem, start, dur, work, lo, hi, *, mu: int = 10,
+                      interpret: bool | None = None):
+    """Gains for a whole portfolio of schedules in ONE kernel launch.
+
+    The kernel body is per-task-independent once the timeline windows are
+    gathered, so a batch of B schedules over the same instance flattens into
+    a (B*N)-task problem: windows are gathered per (batch row, task) from
+    that row's timeline, and a single ``pallas_call`` grid covers all rows.
+
+    Args:
+      rem:  f32[B, T] per-row remaining-budget timelines.
+      start, lo, hi: f32[B, N] per-row schedules / legal bounds.
+      dur, work: f32[N], shared across rows (same instance).
+      mu: max shift.
+      interpret: None = auto (interpret iff the backend is CPU).
+    Returns:
+      f32[B, N, 2*mu+1].
+    """
+    interpret = resolve_interpret(interpret)
+    B, n = start.shape
+    win = jnp.arange(W)[None, None, :] - mu                   # (1, 1, W)
+    rem_pad = jnp.pad(rem, ((0, 0), (W, W)))
+    t_total = rem.shape[1]
+    s_i = start.astype(jnp.int32)
+    e_i = (start + dur[None, :]).astype(jnp.int32)
+    idx_s = jnp.clip(s_i[:, :, None] + win + W, 0, t_total + 2 * W - 1)
+    idx_e = jnp.clip(e_i[:, :, None] + win + W, 0, t_total + 2 * W - 1)
+    win_s = jnp.take_along_axis(rem_pad[:, None, :], idx_s, axis=2)
+    win_e = jnp.take_along_axis(rem_pad[:, None, :], idx_e, axis=2)
+
+    flat = _gain_scan_windows(
+        win_s.reshape(B * n, W), win_e.reshape(B * n, W),
+        start.reshape(B * n), jnp.tile(dur, B), jnp.tile(work, B),
+        lo.reshape(B * n), hi.reshape(B * n), mu=mu, interpret=interpret)
+    return flat.reshape(B, n, 2 * mu + 1)

@@ -1,17 +1,17 @@
 """Public jit'd entry points for the Pallas kernels.
 
-``interpret`` defaults to True in this CPU container (TPU is the lowering
-TARGET); on a real TPU runtime pass ``interpret=False``.
+``interpret=None`` auto-detects the backend (interpret on CPU, compile on
+TPU — see :mod:`repro.kernels.backend`); pass an explicit bool to override.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.kernels.carbon_cost import deficit_timeline
-from repro.kernels.gain_scan import gain_scan
+from repro.kernels.gain_scan import gain_scan, gain_scan_batched
 
 
-def carbon_cost(starts, durs, works, g_eff, *, interpret: bool = True):
+def carbon_cost(starts, durs, works, g_eff, *, interpret: bool | None = None):
     """Total carbon cost of a schedule (scalar f32)."""
     starts = jnp.asarray(starts, jnp.float32)
     ends = starts + jnp.asarray(durs, jnp.float32)
@@ -21,9 +21,23 @@ def carbon_cost(starts, durs, works, g_eff, *, interpret: bool = True):
 
 
 def ls_gains(rem, start, dur, work, lo, hi, *, mu: int = 10,
-             interpret: bool = True):
+             interpret: bool | None = None):
     """Local-search gain matrix f32[N, 2*mu+1] (illegal moves = -1e30)."""
     return gain_scan(
+        jnp.asarray(rem, jnp.float32), jnp.asarray(start, jnp.float32),
+        jnp.asarray(dur, jnp.float32), jnp.asarray(work, jnp.float32),
+        jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
+        mu=mu, interpret=interpret)
+
+
+def ls_gains_batched(rem, start, dur, work, lo, hi, *, mu: int = 10,
+                     interpret: bool | None = None):
+    """Batched gain matrices f32[B, N, 2*mu+1] in ONE kernel launch.
+
+    ``rem``/``start``/``lo``/``hi`` carry a leading batch axis [B, ...]
+    (one row per portfolio variant); ``dur``/``work`` are shared [N].
+    """
+    return gain_scan_batched(
         jnp.asarray(rem, jnp.float32), jnp.asarray(start, jnp.float32),
         jnp.asarray(dur, jnp.float32), jnp.asarray(work, jnp.float32),
         jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
