@@ -1,0 +1,19 @@
+# Tier-1: the correctness gate — must stay NO WORSE than the seed
+# baseline (tests/test_dryrun_machinery.py and tests/test_pipeline.py fail
+# since the seed commit: the installed jax lacks `jax.lax.axis_size` /
+# changed `cost_analysis()`; everything else must pass).
+# Tier-2: cheap perf smoke for PRs touching the hot paths — refreshes
+# benchmarks/out/BENCH_portfolio.json on a tiny matrix in <60s.
+
+PY := PYTHONPATH=src python
+
+.PHONY: test bench bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run --only portfolio
+
+bench-smoke:
+	$(PY) -m benchmarks.run --only portfolio --smoke

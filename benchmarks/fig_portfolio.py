@@ -1,12 +1,19 @@
 """Portfolio engine benchmark: seed-style per-variant loop vs one-pass
-``schedule_portfolio`` on the 17-algorithm matrix, machine-readable.
+``schedule_portfolio`` vs the device fan-out, plus the multi-profile
+replanning engine, machine-readable.
 
 Emits ``benchmarks/out/BENCH_portfolio.json``:
   * ``loop_us_per_instance`` / ``portfolio_us_per_instance`` — live
     measurements of the per-variant ``schedule()`` loop and the portfolio
     engine on the same instances (identical results, tested);
-  * ``jax_fanout_us_per_instance`` — the vmapped device fan-out
-    (``engine="jax"``), greedy stage bit-identical, batched -LS rounds;
+  * ``jax_fanout_us_per_instance`` — the device engine (``engine="jax"``)
+    in its replanning regime (steady-state: executables cached per shape
+    bucket); ``jax_fanout_cold_us_per_instance`` includes the one-off
+    bucket compiles; ``jax_fanout_us_per_instance_before`` is the recorded
+    pre-fix number (per-shape retracing, level-relax scan core,
+    interpreter-mode gain kernel);
+  * ``multi_profile`` — ``schedule_portfolio_multi`` over an ensemble of
+    perturbed profiles vs looping ``schedule_portfolio`` per profile;
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -27,18 +34,34 @@ from benchmarks.common import (
     run_all_variants,
     run_variant_loop,
 )
+from repro.core import generate_profile, schedule_portfolio, \
+    schedule_portfolio_multi
 
 # wall clock of `run.py --only rank,runtime` (scaled-down matrix, this
-# container), measured at the seed commit and after this PR's engine landed.
+# container), measured at the seed commit and after PR1's engine landed.
 SEED_REFERENCE = {
     "matrix": "run.py --only rank,runtime (sizes=(200,)/(200,1000))",
     "seed_commit_seconds": 237.7,     # measured at seed commit, 1-CPU box
     "this_commit_seconds": 46.8,      # same box, portfolio engine (5.1x)
 }
 
+# `engine="jax"` per instance before the fan-out fix (per-shape retracing
+# of the nested level-relax scan + interpreter-mode gain kernel), recorded
+# by this benchmark at the PR1 commit — ON THE REFERENCE MATRIX below.
+# A --smoke run measures a different matrix, so the recorded baselines are
+# withheld there (comparing live tiny-matrix numbers against recorded
+# 200-size baselines would fabricate the speedup).
+JAX_FANOUT_BEFORE_US = 2733936.2
+REFERENCE_MATRIX = {"sizes": [200], "clusters": ["small"], "n_cases": 6}
+
 
 def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
-        with_jax: bool = True):
+        with_jax: bool = True, n_profiles: int = 8):
+    # NOTE: the persistent compilation cache
+    # (repro.kernels.backend.enable_compilation_cache) is deliberately NOT
+    # enabled here: the cold measurement must include the real bucket
+    # compiles on every run, or cold-vs-steady comparisons across commits
+    # would silently go warm after the first run on a machine.
     cases = []
     for case in build_matrix(sizes=sizes, clusters=clusters,
                              factors=(1.0, 2.0), scenarios=("S1", "S3")):
@@ -58,22 +81,67 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         for v, (cost, _) in lr.items():
             assert pr[v][0] == cost, v
 
-    t_jax = None
+    t_jax = t_jax_cold = None
+    multi = None
     if with_jax:
         t0 = time.perf_counter()
         for c in cases:
             run_all_variants(c, engine="jax")
-        t_jax = time.perf_counter() - t0
+        t_jax_cold = time.perf_counter() - t0   # includes bucket compiles
+        t0 = time.perf_counter()
+        for c in cases:
+            run_all_variants(c, engine="jax")
+        t_jax = time.perf_counter() - t0        # replanning regime
+
+        # multi-profile replanning: one instance x an ensemble of perturbed
+        # forecasts; loop re-prepares and re-schedules per member, the
+        # engine prepares the graph once and fans members x variants out
+        # as one device launch
+        c = cases[0]
+        profs = [generate_profile(c.profile.scenario, c.profile.T,
+                                  c.platform, J=48, seed=100 + s)
+                 for s in range(n_profiles)]
+        t0 = time.perf_counter()
+        ref = [schedule_portfolio(c.inst, p, c.platform) for p in profs]
+        t_mloop = time.perf_counter() - t0
+        schedule_portfolio_multi(c.inst, profs, c.platform,
+                                 engine="jax")   # warm the R-bucket shapes
+        t0 = time.perf_counter()
+        res = schedule_portfolio_multi(c.inst, profs, c.platform,
+                                       engine="jax")
+        t_multi = time.perf_counter() - t0
+        # greedy rows must agree with the per-profile numpy loop
+        for r, rr in zip(ref, res):
+            for v in r:
+                if not v.endswith("-LS"):
+                    assert (r[v].start == rr[v].start).all(), v
+        multi = {
+            "n_profiles": n_profiles,
+            "case": c.name,
+            "loop_numpy_us_per_profile": t_mloop / n_profiles * 1e6,
+            "multi_jax_us_per_profile": t_multi / n_profiles * 1e6,
+            "speedup_multi_over_loop": t_mloop / t_multi,
+        }
 
     n = len(cases)
+    matrix = {"sizes": list(sizes), "clusters": list(clusters),
+              "n_cases": n, "n_profiles": n_profiles}
+    on_reference = all(matrix[k] == v for k, v in REFERENCE_MATRIX.items())
     payload = {
+        "matrix": matrix,
         "n_instances": n,
         "variants_per_instance": 17,
         "loop_us_per_instance": t_loop / n * 1e6,
         "portfolio_us_per_instance": t_port / n * 1e6,
         "speedup_loop_over_portfolio": t_loop / t_port,
         "jax_fanout_us_per_instance": (t_jax / n * 1e6) if t_jax else None,
-        "seed_reference": dict(SEED_REFERENCE),
+        "jax_fanout_cold_us_per_instance":
+            (t_jax_cold / n * 1e6) if t_jax_cold else None,
+        # recorded-baseline fields only apply on the reference matrix
+        "jax_fanout_us_per_instance_before":
+            JAX_FANOUT_BEFORE_US if on_reference else None,
+        "multi_profile": multi,
+        "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
     os.makedirs(OUT_DIR, exist_ok=True)
     out_path = os.path.join(OUT_DIR, "BENCH_portfolio.json")
@@ -83,6 +151,10 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
     emit("portfolio_engine", t_port / n * 1e6,
          f"loop/portfolio={t_loop / t_port:.2f}x"
          f";jax_us={payload['jax_fanout_us_per_instance'] or 0:.0f}")
+    if multi:
+        emit("portfolio_multi", multi["multi_jax_us_per_profile"],
+             f"multi/loop={multi['speedup_multi_over_loop']:.2f}x"
+             f";profiles={n_profiles}")
     return payload
 
 

@@ -17,6 +17,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: rank,profile,ratio,ls,ilp,runtime,"
                          "roofline,portfolio")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, <60s; refresh BENCH_portfolio.json "
+                         "cheaply in perf-touching PRs (tier-2: "
+                         "`make bench-smoke`)")
     args = ap.parse_args()
 
     sizes = (200, 1000) if args.full else (200,)
@@ -49,7 +53,10 @@ def main() -> None:
         r7()
     if "portfolio" in want:
         from benchmarks.fig_portfolio import run as r8
-        r8(sizes=(200,), clusters=("small",))
+        if args.smoke:
+            r8(sizes=(60,), clusters=("small",), n_cases=2, n_profiles=4)
+        else:
+            r8(sizes=(200,), clusters=("small",))
 
 
 if __name__ == "__main__":

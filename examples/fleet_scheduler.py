@@ -1,26 +1,35 @@
 """Fleet-level carbon-aware scheduling driven by the dry-run roofline model.
 
 The roofline table (experiments/dryrun/*.json) provides per-(arch x shape)
-step-time estimates on the production mesh; a fleet of training/serving jobs
-across 2 pods becomes a fixed-mapping workflow whose task durations come
-from those estimates, and CaWoSched shifts the jobs into green windows.
+step-time estimates on the production mesh; each fleet of training/serving
+jobs across 2 pods becomes a fixed-mapping workflow whose task durations
+come from those estimates, and CaWoSched shifts the jobs into green
+windows.
+
+Carbon forecasts are uncertain, so each fleet instance is planned against
+an ENSEMBLE of 8 perturbed profiles through ``schedule_portfolio_multi``
+(the graph precompute runs once per instance; every profile only pays its
+overlay) and the ROBUST variant is picked per instance: the one whose
+worst cost across the ensemble is smallest (min-max).
 
     PYTHONPATH=src python examples/fleet_scheduler.py
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 
 import numpy as np
 
-from repro.core import generate_profile, schedule_portfolio
+from repro.core import generate_profile, portfolio_cost_matrix, \
+    robust_pick, schedule_portfolio_multi
 from repro.core.dag import build_instance
 from repro.runtime.carbon_gate import chunk_workflow, fleet_platform
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
                       "dryrun")
+
+N_ENSEMBLE = 8
 
 
 def step_seconds(arch: str, shape: str) -> float:
@@ -33,45 +42,67 @@ def step_seconds(arch: str, shape: str) -> float:
     return 1.0
 
 
+# per fleet: (pod0 job mix, pod1 job mix); (arch, shape, chunks, steps)
+FLEETS = {
+    "train-heavy": (
+        [("qwen2.5-3b", "train_4k", 10, 50),
+         ("smollm-360m", "train_4k", 6, 100)],
+        [("granite-34b", "train_4k", 8, 25),
+         ("whisper-large-v3", "train_4k", 5, 40)],
+    ),
+    "mixed-serve": (
+        [("qwen2.5-3b", "train_4k", 6, 30),
+         ("whisper-large-v3", "train_4k", 8, 60)],
+        [("smollm-360m", "train_4k", 12, 80)],
+    ),
+}
+
+
+def chunks(jobs):
+    out = []
+    for arch, shape, n_chunks, steps in jobs:
+        sec = step_seconds(arch, shape)
+        out += [max(int(sec * steps), 1)] * n_chunks
+    return out
+
+
 def main():
-    # job mix: (arch, shape, number of step-chunks, steps per chunk)
-    jobs_pod0 = [("qwen2.5-3b", "train_4k", 10, 50),
-                 ("smollm-360m", "train_4k", 6, 100)]
-    jobs_pod1 = [("granite-34b", "train_4k", 8, 25),
-                 ("whisper-large-v3", "train_4k", 5, 40)]
-
-    def chunks(jobs):
-        out = []
-        for arch, shape, n_chunks, steps in jobs:
-            sec = step_seconds(arch, shape)
-            out += [max(int(sec * steps), 1)] * n_chunks
-        return out
-
-    c0, c1 = chunks(jobs_pod0), chunks(jobs_pod1)
-    print("pod0 chunk seconds:", c0)
-    print("pod1 chunk seconds:", c1)
-
     plat = fleet_platform(pods=2, chip_watts_idle=100, chip_watts_work=250,
                           chips_per_pod=256)
-    wf, mapping = chunk_workflow([len(c0), len(c1)], [c0, c1])
-    inst = build_instance(wf, mapping, plat, dur=wf.node_w)
-    horizon = int(2.5 * max(sum(c0), sum(c1)))
-    profile = generate_profile("S3", horizon, plat, J=48, seed=3,
-                               work_capacity=int(plat.p_work[:2].sum()))
+    for name, (jobs0, jobs1) in FLEETS.items():
+        c0, c1 = chunks(jobs0), chunks(jobs1)
+        wf, mapping = chunk_workflow([len(c0), len(c1)], [c0, c1])
+        inst = build_instance(wf, mapping, plat, dur=wf.node_w)
+        horizon = int(2.5 * max(sum(c0), sum(c1)))
+        # ensemble: one nominal forecast + perturbed members (same interval
+        # grid, resampled budget noise — forecast uncertainty)
+        profiles = [generate_profile("S3", horizon, plat, J=48, seed=3 + s,
+                                     work_capacity=int(plat.p_work[:2].sum()))
+                    for s in range(N_ENSEMBLE)]
 
-    # one portfolio pass: ASAP + all 16 variants share the per-instance
-    # precompute and the segment-list greedy (the long-horizon fast path —
-    # the candidate list here is ~J + 2N points vs T ~ 10^5 time units)
-    res = schedule_portfolio(inst, profile, plat)
-    base = res["asap"]
-    best = min((r for v, r in res.items() if v != "asap"),
-               key=lambda r: r.cost)
-    print(f"\nfleet horizon {horizon}s; ASAP carbon {base.cost}, "
-          f"CaWoSched carbon {best.cost} [{best.variant}] "
-          f"({best.cost / max(base.cost, 1):.2f}x)")
-    for pod, chain in enumerate(inst.proc_chains[:2]):
-        starts = [int(best.start[t]) for t in chain]
-        print(f"pod{pod} chunk starts: {starts[:12]}{'...' if len(starts) > 12 else ''}")
+        # one multi-profile pass: ASAP + all 16 variants x all 8 members
+        # share the per-instance graph precompute
+        results = schedule_portfolio_multi(inst, profiles, plat)
+        costs, names = portfolio_cost_matrix(results)
+        robust, worst_cost = robust_pick(costs, names)
+        asap_worst = costs[:, names.index("asap")].max()
+        heur = [i for i, n in enumerate(names) if n != "asap"]
+        nominal_best = names[heur[int(np.argmin(costs[0, heur]))]]
+
+        print(f"\n[{name}] horizon {horizon}s, {inst.num_tasks} chunk tasks,"
+              f" {N_ENSEMBLE} forecast members")
+        print(f"  robust (min-max) variant: {robust} "
+              f"(worst-member carbon {worst_cost}; ASAP worst {asap_worst},"
+              f" {worst_cost / max(asap_worst, 1):.2f}x)")
+        if nominal_best != robust:
+            print(f"  nominal-only pick would be {nominal_best} "
+                  f"(worst-member carbon "
+                  f"{costs[:, names.index(nominal_best)].max()})")
+        best = results[0][robust]
+        for pod, chain in enumerate(inst.proc_chains[:2]):
+            starts = [int(best.start[t]) for t in chain]
+            print(f"  pod{pod} chunk starts: {starts[:10]}"
+                  f"{'...' if len(starts) > 10 else ''}")
 
 
 if __name__ == "__main__":

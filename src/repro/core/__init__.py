@@ -20,7 +20,14 @@ from repro.core.estlst import asap_schedule, compute_est, compute_lst, makespan 
 from repro.core.heft import heft_mapping  # noqa: F401
 from repro.core.portfolio import (  # noqa: F401
     PORTFOLIO_VARIANTS,
+    PreparedGraph,
     PreparedInstance,
+    ProfileOverlay,
+    overlay_profile,
+    portfolio_cost_matrix,
+    prepare_graph,
     prepare_instance,
+    robust_pick,
     schedule_portfolio,
+    schedule_portfolio_multi,
 )

@@ -81,14 +81,16 @@ def greedy_schedule(inst: Instance, profile: PowerProfile, platform: Platform,
 
 
 def segment_state(inst: Instance, profile: PowerProfile,
-                  refined: bool = False, k: int = 3):
+                  refined: bool = False, k: int = 3, mask=None):
     """Initial (breakpoints, values) of the segment timeline.
 
     Breakpoints are exactly the candidate-mask points; the value at point
     ``p`` is the effective budget of the unit at ``p`` (constant on the
-    segment up to the next breakpoint).
+    segment up to the next breakpoint). ``mask`` optionally reuses a
+    precomputed candidate mask (the profile overlay's bounds-keyed cache).
     """
-    mask = candidate_mask(inst, profile, refined=refined, k=k)
+    if mask is None:
+        mask = candidate_mask(inst, profile, refined=refined, k=k)
     pts = np.flatnonzero(mask).astype(np.int64)
     g = profile.effective(inst.idle_total).astype(np.int64)
     seg = np.clip(np.searchsorted(profile.bounds, pts, side="right") - 1,

@@ -197,17 +197,23 @@ def dyn_bounds_all(start, dur, T, edges):
     return lo, hi
 
 
-def ls_context(inst: Instance, profile: PowerProfile, platform) -> dict:
-    """Schedule-independent local-search state, reusable across variants.
+def ls_graph_context(inst: Instance, platform=None) -> dict:
+    """The profile-independent half of :func:`ls_context`.
 
-    A :class:`~repro.core.portfolio.PreparedInstance` computes this once and
-    every ``-LS`` variant's :func:`local_search` call shares it.
+    A :class:`~repro.core.portfolio.PreparedGraph` computes this once; each
+    profile overlay completes it with its own ``unit_budget``. ``platform``
+    is optional: a chain's P_work equals the task_work of any of its tasks
+    (``task_work[v] == p_work[proc[v]]`` by construction), so the visit
+    order is derivable from the instance alone.
     """
     N = inst.num_tasks
-    chain_order = np.argsort(
-        -platform.p_work[inst.chain_proc_ids], kind="stable")
+    if platform is not None:
+        chain_power = platform.p_work[inst.chain_proc_ids]
+    else:
+        chain_power = np.asarray(
+            [inst.task_work[c[0]] for c in inst.proc_chains], dtype=np.int64)
+    chain_order = np.argsort(-chain_power, kind="stable")
     return {
-        "unit_budget": profile.unit_budget(inst.idle_total).astype(np.int64),
         "visit": [int(v) for ci in chain_order
                   for v in inst.proc_chains[ci]],
         "edges": (np.repeat(np.arange(N), np.diff(inst.pred_ptr)),
@@ -219,6 +225,17 @@ def ls_context(inst: Instance, profile: PowerProfile, platform) -> dict:
         "work_l": inst.task_work.tolist(),
         "dur_l": inst.dur.tolist(),
     }
+
+
+def ls_context(inst: Instance, profile: PowerProfile, platform) -> dict:
+    """Schedule-independent local-search state, reusable across variants.
+
+    A :class:`~repro.core.portfolio.PreparedInstance` computes this once and
+    every ``-LS`` variant's :func:`local_search` call shares it.
+    """
+    ctx = ls_graph_context(inst, platform)
+    ctx["unit_budget"] = profile.unit_budget(inst.idle_total).astype(np.int64)
+    return ctx
 
 
 def local_search(inst: Instance, profile: PowerProfile, platform,
@@ -235,83 +252,103 @@ def local_search(inst: Instance, profile: PowerProfile, platform,
     start = np.asarray(start, dtype=np.int64).copy()
     pad = mu
     rem_pad = np.zeros(T + 2 * pad, dtype=np.int64)
-    rem = rem_pad[pad:pad + T]                    # writes go through the view
-    rem[:] = ctx["unit_budget"] - work_timeline(inst, T, start)
+    rem_pad[pad:pad + T] = ctx["unit_budget"] - work_timeline(inst, T, start)
+
+    rounds = 0
+    while True:
+        any_gain = reference_round(inst, T, rem_pad, pad, start, mu, ctx)
+        rounds += 1
+        if not any_gain or (max_rounds is not None and rounds >= max_rounds):
+            break
+    return start
+
+
+def reference_round(inst: Instance, T: int, rem_pad: np.ndarray, pad: int,
+                    start: np.ndarray, mu: int, ctx: dict) -> bool:
+    """ONE round of the paper's §5.3 hill climb, in place.
+
+    Exactly the loop body of :func:`local_search` (which delegates here):
+    batch-propose every task's first improving legal shift against the
+    round-start timeline, then visit tasks in processor order, committing
+    fresh proposals and re-evaluating stale ones exactly. Mutates ``start``
+    and the timeline behind ``rem_pad``; returns whether any move committed.
+
+    Shared with the batched device climbers
+    (:mod:`repro.core.local_search_jax`), whose per-variant termination rule
+    is "a reference round commits nothing" — the same criterion that ends
+    the sequential climb, so no variant stops while the sequential reference
+    could still improve it.
+    """
     dur = inst.dur
     work = inst.task_work
-
-    # processors visited in non-increasing P_work order (compute + links)
-    visit = ctx["visit"]
+    rem = rem_pad[pad:pad + T]                    # writes go through the view
     dpos = np.arange(1, mu + 1)
     dneg = np.arange(-mu, 0)
+    # processors visited in non-increasing P_work order (compute + links);
     # edge arrays for the vectorized dynamic bounds; DAG neighbour lists
     # (which include the chain edges) for the moved-neighbour staleness check
+    visit = ctx["visit"]
     edges = ctx["edges"]
     nbrs = ctx["nbrs"]
     work_l = ctx["work_l"]
     dur_l = ctx["dur_l"]
 
-    rounds = 0
-    while True:
-        any_gain = False
-        # round-start snapshot: cached proposals valid until invalidated
-        lo_all, hi_all = dyn_bounds_all(start, dur, T, edges)
-        lo_all = np.maximum(lo_all, start - mu)
-        hi_all = np.minimum(hi_all, start + mu)
-        proposal, fresh_row = _batch_proposals(
-            rem_pad, pad, start, dur, work, lo_all, hi_all, mu, T)
-        prop_l = proposal.tolist()
-        fresh_l = fresh_row.tolist()
-        start_l = start.tolist()
-        moved: set[int] = set()
-        dirty: list[tuple[int, int]] = []         # committed-move windows
+    any_gain = False
+    # round-start snapshot: cached proposals valid until invalidated
+    lo_all, hi_all = dyn_bounds_all(start, dur, T, edges)
+    lo_all = np.maximum(lo_all, start - mu)
+    hi_all = np.minimum(hi_all, start + mu)
+    proposal, fresh_row = _batch_proposals(
+        rem_pad, pad, start, dur, work, lo_all, hi_all, mu, T)
+    prop_l = proposal.tolist()
+    fresh_l = fresh_row.tolist()
+    start_l = start.tolist()
+    moved: set[int] = set()
+    dirty: list[tuple[int, int]] = []             # committed-move windows
 
-        for v in visit:
-            w = work_l[v]
-            if w == 0:
+    for v in visit:
+        w = work_l[v]
+        if w == 0:
+            continue
+        s = start_l[v]
+        e = s + dur_l[v]
+        stale = (not fresh_l[v]
+                 or any(u in moved for u in nbrs[v])
+                 or any(a < e + mu and s - mu < b for a, b in dirty))
+        if not stale:
+            new_s = prop_l[v]
+            if new_s < 0:
                 continue
-            s = start_l[v]
-            e = s + dur_l[v]
-            stale = (not fresh_l[v]
-                     or any(u in moved for u in nbrs[v])
-                     or any(a < e + mu and s - mu < b for a, b in dirty))
-            if not stale:
-                new_s = prop_l[v]
+        else:
+            lo, hi = dyn_bounds(inst, start, v, T)
+            lo = max(lo, s - mu)
+            hi = min(hi, s + mu)
+            if lo > hi:
+                continue
+            if e <= T:
+                got = _first_improving(rem_pad, pad, s, e, dur_l[v], w,
+                                       lo, hi, mu, dpos, dneg)
+                if got is None:
+                    continue
+                new_s = got[0]
+            else:
+                # out-of-horizon task (pathological placements): keep the
+                # reference scalar scan, whose slices clip at T.
+                new_s = -1
+                for cand_s in range(lo, hi + 1):
+                    if cand_s == s:
+                        continue
+                    if move_gain(rem, s, e, cand_s, w) > 0:
+                        new_s = cand_s
+                        break
                 if new_s < 0:
                     continue
-            else:
-                lo, hi = dyn_bounds(inst, start, v, T)
-                lo = max(lo, s - mu)
-                hi = min(hi, s + mu)
-                if lo > hi:
-                    continue
-                if e <= T:
-                    got = _first_improving(rem_pad, pad, s, e, dur_l[v], w,
-                                           lo, hi, mu, dpos, dneg)
-                    if got is None:
-                        continue
-                    new_s = got[0]
-                else:
-                    # out-of-horizon task (pathological placements): keep the
-                    # reference scalar scan, whose slices clip at T.
-                    new_s = -1
-                    for cand_s in range(lo, hi + 1):
-                        if cand_s == s:
-                            continue
-                        if move_gain(rem, s, e, cand_s, w) > 0:
-                            new_s = cand_s
-                            break
-                    if new_s < 0:
-                        continue
-            apply_move(rem, s, e, new_s, w)
-            start[v] = new_s
-            any_gain = True
-            moved.add(v)
-            dirty.append((min(s, new_s), max(e, new_s + dur_l[v])))
-        rounds += 1
-        if not any_gain or (max_rounds is not None and rounds >= max_rounds):
-            break
-    return start
+        apply_move(rem, s, e, new_s, w)
+        start[v] = new_s
+        any_gain = True
+        moved.add(v)
+        dirty.append((min(s, new_s), max(e, new_s + dur_l[v])))
+    return any_gain
 
 
 def timeline_cost(rem: np.ndarray) -> int:

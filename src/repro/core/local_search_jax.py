@@ -1,28 +1,42 @@
-"""Batched local search: the Pallas gain kernel proposes, exact math commits.
+"""Batched local search: device-resident gain/commit rounds + exact polish.
 
 The paper's local search walks tasks sequentially and applies the first
-improving +-mu shift. On TPU we instead evaluate *all* (task, shift) gains
-at once with ``kernels.gain_scan`` (one kernel launch per round), then
-commit proposals in gain order with exact re-evaluation (`move_gain`) —
-re-evaluation is O(mu) per move, so commits are cheap while the O(N*mu*W)
-sweep runs on device. Cost is monotonically non-increasing, like the paper's
-hill climber; tests check both climbers against each other.
+improving +-mu shift. The device climbers instead evaluate *all*
+(task, shift) gains at once (``kernels.gain_scan``) and commit proposals in
+gain order with exact integer re-evaluation. Two generations live here:
 
-:func:`local_search_portfolio` is the portfolio engine's variant: the hill
-climbs of ALL ``-LS`` variants advance together, one
-``kernels.gain_scan_batched`` launch per round for the whole [V, N, 2mu+1]
-gain tensor (instead of V launches), with per-variant exact commits;
-variants that converge early are frozen in place until the rest finish.
+* :func:`local_search_batched` — the host-loop version: one gain launch
+  per round, commits on host (``_commit_round``). One schedule at a time.
+* :func:`local_search_portfolio` / :func:`local_search_portfolio_multi` —
+  the portfolio engine's climber: ALL rows (``-LS`` variants x ensemble
+  profiles) advance together, and the whole gain/commit round loop runs
+  device-resident as ONE jitted ``lax.while_loop`` (gains via the jnp
+  prefix-sum twin of the Pallas kernel, commits as an in-loop top-K scan
+  with exact integer re-evaluation) — one host sync per hill climb, not
+  one per round. Rows carry per-variant round budgets and deactivate
+  individually when a round commits nothing.
+
+After the device climb converges, every row is *polished* with the exact
+sequential reference (:func:`repro.core.local_search.reference_round`)
+until a full reference round commits nothing. Termination therefore
+implies the sequential reference cannot improve the result either — no
+variant stops earlier than its sequential reference would (tested), while
+cost stays monotonically non-increasing throughout.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
 from repro.core.carbon import PowerProfile, work_timeline
 from repro.core.dag import Instance
-from repro.core.local_search import apply_move, dyn_bounds, move_gain
+from repro.core.local_search import apply_move, dyn_bounds, \
+    ls_graph_context, move_gain, reference_round
 from repro.core.local_search import dyn_bounds_all as _dyn_windows
-from repro.kernels.ops import ls_gains, ls_gains_batched
+from repro.kernels.ops import ls_gains
+
+_COMMIT_K = 32       # device commits per row per round (rest wait a round)
 
 
 def _commit_round(inst, T, rem, start, gains, mu) -> bool:
@@ -79,53 +93,215 @@ def local_search_batched(inst: Instance, profile: PowerProfile,
     return start
 
 
+# ---------------------------------------------------------------------------
+# Device-resident portfolio climb
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _climb_impl(mu: int, max_rounds: int):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.kernels.gain_scan import gains_from_windows, gather_windows
+
+    f32 = jnp.float32
+
+    def climb_row(rem, start, t_real, dur, work, pred_mask, succ_mask):
+        """One row's full hill climb: rounds loop on device, no host sync.
+
+        rem int32 [T], start int32 [N]; pred/succ_mask bool [N, N] (direct
+        DAG+chain edges); t_real = the real horizon (T may be padded).
+        """
+        T = rem.shape[0]
+        tgrid = jnp.arange(T, dtype=jnp.int32)
+        durf = dur.astype(f32)
+        workf = work.astype(f32)
+
+        def round_gains(rem, start):
+            # round-start dynamic bounds, as in dyn_bounds_all
+            lo = jnp.max(jnp.where(pred_mask, (start + dur)[None, :], 0),
+                         axis=1)
+            hi = jnp.min(jnp.where(succ_mask, start[None, :], t_real),
+                         axis=1) - dur
+            win_s, win_e = gather_windows(rem.astype(f32), start, dur, mu=mu)
+            return gains_from_windows(
+                win_s, win_e, workf, durf,
+                (lo - start).astype(f32), (hi - start).astype(f32), mu=mu)
+
+        def commit_step(carry, v):
+            rem, start, any_commit, best_delta, best_gain = carry
+            s = start[v]
+            d_v = dur[v]
+            w_v = work[v]
+            e = s + d_v
+            # current-state legal bounds (commits earlier in this scan may
+            # have moved neighbours), exactly _commit_round's clamp
+            dlo = jnp.max(jnp.where(pred_mask[v], start + dur, 0))
+            dhi = jnp.min(jnp.where(succ_mask[v], start, t_real)) - d_v
+            new_s = jnp.clip(s + best_delta[v], dlo, dhi)
+            dd = new_s - s
+            ln = jnp.minimum(jnp.abs(dd), d_v)
+            # symmetric difference of old/new windows (move_gain identities)
+            vac_lo = jnp.where(dd > 0, s, e - ln)
+            occ_hi = jnp.where(dd > 0, new_s + d_v, new_s + ln)
+            vac = (tgrid >= vac_lo) & (tgrid < vac_lo + ln)
+            occ = (tgrid >= occ_hi - ln) & (tgrid < occ_hi)
+            released = jnp.sum(jnp.where(
+                vac, jnp.minimum(jnp.maximum(-rem, 0), w_v), 0))
+            incurred = jnp.sum(jnp.where(
+                occ, jnp.minimum(jnp.maximum(w_v - jnp.maximum(rem, 0), 0),
+                                 w_v), 0))
+            ok = ((best_gain[v] > 0) & (dlo <= dhi) & (dd != 0)
+                  & (released - incurred > 0))
+            old = (tgrid >= s) & (tgrid < e)
+            new = (tgrid >= new_s) & (tgrid < new_s + d_v)
+            rem = jnp.where(ok, rem + w_v * old.astype(rem.dtype)
+                            - w_v * new.astype(rem.dtype), rem)
+            start = jnp.where(ok, start.at[v].set(new_s), start)
+            return (rem, start, any_commit | ok, best_delta, best_gain), None
+
+        def round_body(state):
+            rem, start, rounds, _ = state
+            g = round_gains(rem, start)
+            best_delta = jnp.argmax(g, axis=1).astype(jnp.int32) - mu
+            best_gain = g.max(axis=1)
+            order = jnp.argsort(-best_gain).astype(jnp.int32)
+            k = min(_COMMIT_K, order.shape[0])
+            carry = (rem, start, jnp.bool_(False), best_delta, best_gain)
+            carry, _ = lax.scan(commit_step, carry, order[:k])
+            return (carry[0], carry[1], rounds + 1, carry[2])
+
+        def cond(state):
+            return state[3] & (state[2] < max_rounds)
+
+        state = (rem, start, jnp.int32(0), jnp.bool_(True))
+        state = lax.while_loop(cond, round_body, state)
+        return state[1]
+
+    rows = jax.vmap(climb_row,
+                    in_axes=(0, 0, None, None, None, None, None))
+    return jax.jit(rows)
+
+
+def _dense_adjacency(inst: Instance, ctx: dict | None):
+    """bool [N, N] (pred, succ) masks of the direct G_c edges, cached."""
+    if ctx is not None and "adj_dense" in ctx:
+        return ctx["adj_dense"]
+    N = inst.num_tasks
+    u = np.repeat(np.arange(N), np.diff(inst.succ_ptr))
+    v = inst.succ_idx
+    pred = np.zeros((N, N), dtype=bool)
+    succ = np.zeros((N, N), dtype=bool)
+    pred[v, u] = True
+    succ[u, v] = True
+    if ctx is not None:
+        ctx["adj_dense"] = (pred, succ)
+    return pred, succ
+
+
+def local_search_portfolio_multi(inst: Instance, T: int,
+                                 unit_budgets: np.ndarray,
+                                 starts: np.ndarray, mu: int = 10,
+                                 max_rounds: int = 200,
+                                 interpret: bool | None = None,
+                                 ctx: dict | None = None,
+                                 polish: bool = True) -> np.ndarray:
+    """Hill-climb a batch of schedule rows of one instance at once.
+
+    The portfolio engine's climber: rows are any mix of ``-LS`` variants
+    and ensemble profiles (each row has its own budget timeline). The whole
+    round loop runs device-resident (ONE host sync), then each row is
+    polished to sequential-reference local optimality with its own round
+    budget.
+
+    Args:
+      unit_budgets: int [R, T] per-row effective budget timelines.
+      starts:       int [R, N] one greedy schedule per row.
+      interpret:    unused (the device loop's gain oracle is always the
+        jnp prefix-sum twin); kept for climber-signature compatibility.
+      ctx:          optional shared graph context (``ls_graph_context``;
+        extra keys such as ``unit_budget`` are ignored).
+    Returns:
+      int64 [R, N] improved schedules; per-row cost is monotonically
+      non-increasing, and no row terminates while a sequential reference
+      round could still improve it.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.greedy_jax import N_BUCKET, T_BUCKET, _bucket_up
+
+    starts = np.asarray(starts, dtype=np.int64).copy()
+    R, N = starts.shape
+    unit_budgets = np.asarray(unit_budgets, dtype=np.int64)
+    ctx = ctx if ctx is not None else ls_graph_context(inst)
+    pred, succ = _dense_adjacency(inst, ctx)
+
+    rems = unit_budgets - np.stack(
+        [work_timeline(inst, T, starts[i]) for i in range(R)])
+
+    # bucket-padded device inputs: padded tasks have work 0 (never legal),
+    # padded rows repeat row 0 (computed, discarded), padded time units are
+    # unreachable (moves clamp to the real horizon t_real)
+    Np = _bucket_up(N, N_BUCKET)
+    Tp = _bucket_up(T, T_BUCKET)
+    Rp = _bucket_up(R, 8)
+    rem_p = np.zeros((Rp, Tp), dtype=np.int32)
+    rem_p[:R, :T] = rems
+    rem_p[R:] = rem_p[0]
+    start_p = np.zeros((Rp, Np), dtype=np.int32)
+    start_p[:R, :N] = starts
+    start_p[R:] = start_p[0]
+    dur_p = np.zeros(Np, dtype=np.int32)
+    dur_p[:N] = inst.dur
+    work_p = np.zeros(Np, dtype=np.int32)
+    work_p[:N] = inst.task_work
+    pred_p = np.zeros((Np, Np), dtype=bool)
+    pred_p[:N, :N] = pred
+    succ_p = np.zeros((Np, Np), dtype=bool)
+    succ_p[:N, :N] = succ
+
+    climbed = np.asarray(_climb_impl(mu, max_rounds)(
+        jnp.asarray(rem_p), jnp.asarray(start_p), jnp.int32(T),
+        jnp.asarray(dur_p), jnp.asarray(work_p), jnp.asarray(pred_p),
+        jnp.asarray(succ_p)))
+    starts = climbed[:R, :N].astype(np.int64)
+
+    if polish:
+        pad = mu
+        for i in range(R):
+            rem_pad = np.zeros(T + 2 * pad, dtype=np.int64)
+            rem_pad[pad:pad + T] = unit_budgets[i] - work_timeline(
+                inst, T, starts[i])
+            budget = max_rounds                   # per-variant round budget
+            while budget > 0 and reference_round(inst, T, rem_pad, pad,
+                                                 starts[i], mu, ctx):
+                budget -= 1
+    return starts
+
+
 def local_search_portfolio(inst: Instance, profile: PowerProfile,
                            starts: np.ndarray, mu: int = 10,
                            max_rounds: int = 200,
                            interpret: bool | None = None,
-                           ctx: dict | None = None) -> np.ndarray:
+                           ctx: dict | None = None,
+                           polish: bool = True) -> np.ndarray:
     """Hill-climb a whole portfolio of schedules of one instance at once.
 
     Args:
       starts: int [V, N] — one greedy schedule per ``-LS`` variant.
     Returns:
-      int64 [V, N] improved schedules; each row's cost is monotonically
-      non-increasing over rounds (same climber as
-      :func:`local_search_batched`, fanned out over the variant axis with a
-      single batched kernel launch per round).
+      int64 [V, N] improved schedules (see
+      :func:`local_search_portfolio_multi`; this is the single-profile
+      slice of it).
     """
-    T = profile.T
-    starts = np.asarray(starts, dtype=np.int64).copy()
-    V, N = starts.shape
-    dur = inst.dur
-    work = inst.task_work
-    if ctx is not None:
-        unit_budget = ctx["unit_budget"]
-        edges = ctx["edges"]
+    starts = np.asarray(starts, dtype=np.int64)
+    V = starts.shape[0]
+    if ctx is not None and "unit_budget" in ctx:
+        unit = np.asarray(ctx["unit_budget"], dtype=np.int64)
     else:
-        unit_budget = profile.unit_budget(inst.idle_total).astype(np.int64)
-        edges = (np.repeat(np.arange(N), np.diff(inst.pred_ptr)),
-                 inst.pred_idx,
-                 np.repeat(np.arange(N), np.diff(inst.succ_ptr)),
-                 inst.succ_idx)
-    rems = np.stack([unit_budget - work_timeline(inst, T, starts[i])
-                     for i in range(V)])
-    active = np.ones(V, dtype=bool)
-
-    for _ in range(max_rounds):
-        lo = np.empty((V, N), dtype=np.int64)
-        hi = np.empty((V, N), dtype=np.int64)
-        for i in range(V):
-            lo[i], hi[i] = _dyn_windows(starts[i], dur, T, edges)
-        gains = np.asarray(ls_gains_batched(
-            rems.astype(np.float32), starts.astype(np.float32),
-            dur.astype(np.float32), work.astype(np.float32),
-            lo.astype(np.float32), hi.astype(np.float32),
-            mu=mu, interpret=interpret))
-        for i in range(V):
-            if active[i]:
-                active[i] = _commit_round(inst, T, rems[i], starts[i],
-                                          gains[i], mu)
-        if not active.any():
-            break
-    return starts
+        unit = profile.unit_budget(inst.idle_total).astype(np.int64)
+    budgets = np.broadcast_to(unit, (V, profile.T))
+    return local_search_portfolio_multi(
+        inst, profile.T, budgets, starts, mu=mu, max_rounds=max_rounds,
+        interpret=interpret, ctx=ctx, polish=polish)

@@ -1,34 +1,53 @@
-"""Portfolio scheduling engine: every CaWoSched variant of an instance in
-one pass (paper §6's 17-algorithm experimental matrix as a single call).
+"""Portfolio scheduling engine: every CaWoSched variant of an instance,
+against one carbon forecast or a whole ensemble of them, in one pass.
 
-The per-variant :func:`repro.core.cawosched.schedule` entry point pays the
-shared per-instance work — EST/LST, candidate masks, score orders, the
-budget timeline, local-search adjacency — once *per variant*. This engine
-amortizes it once *per instance* and fans the variants out:
+The precompute behind the paper's §6 17-algorithm matrix splits cleanly
+along the profile axis, and this module's layering follows that split:
 
-* :class:`PreparedInstance` — the amortized precompute. Contract: every
-  field is a pure function of ``(inst, profile, platform, k)`` and is never
-  mutated by the schedulers (greedy runs copy EST/LST internally; local
-  search copies the budget timeline), so one object is shared by all 16
-  variants, by local search, and by the jax fan-out, and may be cached
-  across repeated ``schedule_portfolio`` calls.
+* :class:`PreparedGraph` — the profile-INDEPENDENT half, a pure function of
+  ``(inst, platform, T, k)``: EST/LST, the four score orders, adjacency
+  lists, the graph half of the local-search context, and (lazily) the
+  longest-path matrix + padded device tensors of the jax fan-out. One graph
+  serves every profile sharing the horizon ``T``.
+* :class:`ProfileOverlay` — the cheap per-profile remainder: candidate
+  masks and the segment skeleton (functions of the profile's interval
+  *bounds*, cached on the graph so an ensemble sharing a grid pays them
+  once), segment budget values and the per-unit budget timeline (functions
+  of the profile's *budget*), and the completed local-search context.
+* :class:`PreparedInstance` — graph + overlay glued back together; the
+  amortized per-(instance, profile) state every scheduler consumes.
+  Contract: no field is ever mutated by the schedulers (greedy runs copy
+  EST/LST internally; local search copies the budget timeline), so one
+  object is shared by all 16 variants, by local search, and by the jax
+  fan-out, and may be cached across calls. ``prepare_graph(inst) +
+  overlay_profile(profile)`` is bit-identical to
+  ``prepare_instance(inst, profile)`` by construction (and by test).
+
+Engines:
+
 * :func:`schedule_portfolio` — the numpy engine. Bit-identical to looping
   ``schedule()`` over variants (tests assert equality): the 8 unique greedy
-  configurations run once each on the segment-list fast path
-  (:func:`repro.core.greedy.greedy_core_segments`) and are shared by their
-  plain and ``-LS`` variants; each ``-LS`` variant then runs the exact
-  sequential local search with the shared :func:`ls_context`.
+  configurations run once each on the segment-list fast path and are shared
+  by their plain and ``-LS`` variants; each ``-LS`` variant then runs the
+  exact sequential local search with the shared context.
 * ``engine="jax"`` — device fan-out: one jitted vmapped ``lax.scan``
   produces all greedy variants (:func:`repro.core.greedy_jax
-  .greedy_fanout_jax`), and all ``-LS`` hill climbs advance together with
-  ONE batched gain-kernel launch per round
-  (:func:`repro.core.local_search_jax.local_search_portfolio`). Greedy
-  starts are bit-identical to numpy; the batched hill climb is monotone but
-  commits moves in gain order, so ``-LS`` costs may differ from the
-  sequential reference.
+  .greedy_fanout_jax`, bit-identical to numpy), and all ``-LS`` hill climbs
+  advance on device together (:func:`repro.core.local_search_jax
+  .local_search_portfolio`: device-resident gain/commit rounds, then an
+  exact sequential polish, so ``-LS`` costs may differ from — never trail —
+  the batched reference's stopping point).
+* :func:`schedule_portfolio_multi` — the replanning engine: one instance
+  against N profiles (forecast ensemble members, rolling-horizon windows).
+  Prepares the graph once, overlays each profile, and under ``engine="jax"``
+  fans profiles x variants out as ONE device launch
+  (:func:`repro.core.greedy_jax.greedy_fanout_multi_jax`) plus one batched
+  hill climb over all (profile, ``-LS``-variant) rows. Per profile, results
+  are bit-identical to calling :func:`schedule_portfolio` with the same
+  engine on that profile alone.
 * :func:`portfolio_starts_batch` — shape-bucketed instance batching: the
-  scan core vmaps a second time over instances whose padded shapes match,
-  so one jitted call schedules a whole bucket x all variants.
+  scan core vmaps over instances whose padded shapes match, so one jitted
+  call schedules a whole bucket x all variants.
 """
 from __future__ import annotations
 
@@ -45,7 +64,7 @@ from repro.core.dag import Instance
 from repro.core.estlst import compute_est, compute_lst
 from repro.core.greedy import adjacency_lists, greedy_core_segments, \
     segment_state
-from repro.core.local_search import local_search, ls_context
+from repro.core.local_search import local_search, ls_graph_context
 from repro.core.scores import task_order
 from repro.core.subdivide import candidate_mask
 
@@ -59,52 +78,138 @@ _COMBOS: tuple[tuple[str, bool, bool], ...] = tuple(
 
 
 @dataclasses.dataclass
-class PreparedInstance:
-    """Amortized per-(instance, profile, platform, k) scheduling state."""
+class PreparedGraph:
+    """Profile-independent scheduling state of ``(inst, platform, T, k)``."""
 
     inst: Instance
-    profile: PowerProfile
     platform: Platform
+    T: int
     k: int
     est0: np.ndarray                  # [N] EST  (== the ASAP schedule)
     lst0: np.ndarray                  # [N] LST
     feasible: bool                    # est0 <= lst0 everywhere
-    orders: dict                      # (score, weighted) -> int64 [N]
+    orders: dict                      # lazy (score, weighted) -> int64 [N]
+    adj: tuple                        # (succ_lists, pred_lists)
+    ls_graph: dict                    # ls_graph_context() (no unit_budget)
+    _masks: dict = dataclasses.field(default_factory=dict)
+    _lp: np.ndarray | None = None     # lazy longest-path matrix (jax path)
+    _shared: tuple | None = None      # lazy padded device tensors
+
+    _MASK_CACHE = 8                   # bounds keys kept (FIFO)
+
+    def masks_for(self, profile: PowerProfile) -> dict:
+        """refined -> bool [T+1] candidate masks; cached by interval bounds
+        (an ensemble of budget perturbations over one grid computes them
+        once). The cache is bounded so a long-lived graph replanning over
+        rolling grids does not grow without limit."""
+        key = profile.bounds.tobytes()
+        if key not in self._masks:
+            while len(self._masks) >= self._MASK_CACHE:
+                self._masks.pop(next(iter(self._masks)))
+            self._masks[key] = {
+                r: candidate_mask(self.inst, profile, refined=r, k=self.k)
+                for r in (False, True)}
+        return self._masks[key]
+
+    def order_for(self, score: str, weighted: bool) -> np.ndarray:
+        """The (score, weighted) task order, computed on first use (a
+        pinned-variant caller pays for one order, not all four)."""
+        if not self.feasible:
+            raise ValueError("infeasible: deadline below ASAP makespan")
+        key = (score, weighted)
+        if key not in self.orders:
+            self.orders[key] = task_order(
+                self.inst, self.est0, self.lst0, score, weighted,
+                self.platform)
+        return self.orders[key]
+
+    def lp(self) -> np.ndarray:
+        if self._lp is None:
+            from repro.core.greedy_jax import longest_path_matrix
+            self._lp = longest_path_matrix(self.inst)
+        return self._lp
+
+    def shared(self):
+        """Bucket-padded device tensors, resident across fan-out calls."""
+        if self._shared is None:
+            from repro.core.greedy_jax import padded_shared
+            self._shared = padded_shared(self.inst, self.est0, self.lst0,
+                                         self.lp())
+        return self._shared
+
+
+@dataclasses.dataclass
+class ProfileOverlay:
+    """Per-profile overlay completing a :class:`PreparedGraph`."""
+
+    profile: PowerProfile
     masks: dict                       # refined -> bool [T+1] candidate mask
     segs: dict                        # refined -> (pts0, vals0) segment state
-    adj: tuple                        # (succ_lists, pred_lists)
-    ls: dict                          # ls_context() shared by -LS variants
-    _buckets: tuple | None = None     # lazy level buckets (jax fan-out)
+    unit_budget: np.ndarray           # int64 [T] effective per-unit budget
+    ls: dict                          # completed ls_context()
 
-    def buckets(self):
-        if self._buckets is None:
-            from repro.core.greedy_jax import _level_buckets
-            self._buckets = _level_buckets(self.inst)
-        return self._buckets
+
+def prepare_graph(inst: Instance, platform: Platform, T: int,
+                  k: int = 3) -> PreparedGraph:
+    """Run the profile-independent precompute once per (instance, horizon)."""
+    est0 = compute_est(inst)
+    lst0 = compute_lst(inst, T)
+    feasible = bool((est0 <= lst0).all())
+    return PreparedGraph(
+        inst=inst, platform=platform, T=T, k=k,
+        est0=est0, lst0=lst0, feasible=feasible, orders={},
+        adj=adjacency_lists(inst), ls_graph=ls_graph_context(inst, platform))
+
+
+def overlay_profile(graph: PreparedGraph,
+                    profile: PowerProfile) -> ProfileOverlay:
+    """Complete ``graph`` for one profile; see :class:`ProfileOverlay`."""
+    if profile.T != graph.T:
+        raise ValueError(
+            f"profile horizon {profile.T} != prepared horizon {graph.T}")
+    masks = graph.masks_for(profile)
+    segs = {r: segment_state(graph.inst, profile, mask=mask)
+            for r, mask in masks.items()}
+    unit_budget = profile.unit_budget(graph.inst.idle_total).astype(np.int64)
+    ls = dict(graph.ls_graph)
+    ls["unit_budget"] = unit_budget
+    return ProfileOverlay(profile=profile, masks=masks, segs=segs,
+                          unit_budget=unit_budget, ls=ls)
+
+
+@dataclasses.dataclass
+class PreparedInstance:
+    """Amortized per-(instance, profile, platform, k) scheduling state.
+
+    A thin composition of :class:`PreparedGraph` and
+    :class:`ProfileOverlay`; the flat attribute surface (``est0``,
+    ``orders``, ``masks``, ``ls``, ...) is kept for every scheduler and
+    test that consumes the amortized state directly.
+    """
+
+    graph: PreparedGraph
+    overlay: ProfileOverlay
+
+    inst = property(lambda self: self.graph.inst)
+    platform = property(lambda self: self.graph.platform)
+    k = property(lambda self: self.graph.k)
+    est0 = property(lambda self: self.graph.est0)
+    lst0 = property(lambda self: self.graph.lst0)
+    feasible = property(lambda self: self.graph.feasible)
+    orders = property(lambda self: self.graph.orders)
+    adj = property(lambda self: self.graph.adj)
+    profile = property(lambda self: self.overlay.profile)
+    masks = property(lambda self: self.overlay.masks)
+    segs = property(lambda self: self.overlay.segs)
+    ls = property(lambda self: self.overlay.ls)
 
 
 def prepare_instance(inst: Instance, profile: PowerProfile,
                      platform: Platform, k: int = 3) -> PreparedInstance:
-    """Run the shared precompute once; see :class:`PreparedInstance`."""
-    T = profile.T
-    est0 = compute_est(inst)
-    lst0 = compute_lst(inst, T)
-    feasible = bool((est0 <= lst0).all())
-    orders = {}
-    if feasible:
-        for score in ("slack", "press"):
-            for weighted in (False, True):
-                orders[(score, weighted)] = task_order(
-                    inst, est0, lst0, score, weighted, platform)
-    masks = {r: candidate_mask(inst, profile, refined=r, k=k)
-             for r in (False, True)}
-    segs = {r: segment_state(inst, profile, refined=r, k=k)
-            for r in (False, True)}
-    return PreparedInstance(
-        inst=inst, profile=profile, platform=platform, k=k,
-        est0=est0, lst0=lst0, feasible=feasible, orders=orders,
-        masks=masks, segs=segs, adj=adjacency_lists(inst),
-        ls=ls_context(inst, profile, platform))
+    """Graph + overlay in one call; see :class:`PreparedInstance`."""
+    graph = prepare_graph(inst, platform, profile.T, k=k)
+    return PreparedInstance(graph=graph,
+                            overlay=overlay_profile(graph, profile))
 
 
 def _greedy_starts_numpy(prep: PreparedInstance, combos) -> dict:
@@ -115,7 +220,7 @@ def _greedy_starts_numpy(prep: PreparedInstance, combos) -> dict:
         pts0, vals0 = prep.segs[refined]
         start = greedy_core_segments(
             prep.inst, prep.profile.T, prep.est0, prep.lst0,
-            prep.orders[(score, weighted)], pts0, vals0, prep.adj)
+            prep.graph.order_for(score, weighted), pts0, vals0, prep.adj)
         out[(score, weighted, refined)] = (start, time.perf_counter() - t0)
     return out
 
@@ -126,34 +231,15 @@ def _greedy_starts_jax(prep: PreparedInstance, combos) -> dict:
 
     t0 = time.perf_counter()
     masks = np.stack([prep.masks[r] for (_, _, r) in combos])
-    orders = np.stack([prep.orders[(s, w)] for (s, w, _) in combos])
+    orders = np.stack([prep.graph.order_for(s, w) for (s, w, _) in combos])
     starts = np.asarray(greedy_fanout_jax(
         prep.inst, prep.profile, prep.est0, prep.lst0, masks, orders,
-        prep.buckets()), dtype=np.int64)
+        shared=prep.graph.shared()), dtype=np.int64)
     dt = (time.perf_counter() - t0) / max(len(combos), 1)
     return {c: (starts[i], dt) for i, c in enumerate(combos)}
 
 
-def schedule_portfolio(inst: Instance, profile: PowerProfile,
-                       platform: Platform, variants=None, k: int = 3,
-                       mu: int = 10, validate: bool = True,
-                       engine: str = "numpy",
-                       prep: PreparedInstance | None = None
-                       ) -> dict[str, ScheduleResult]:
-    """Schedule all requested variants (default: asap + all 16) in one pass.
-
-    ``engine="numpy"`` is bit-identical to the per-variant ``schedule()``
-    loop; ``engine="jax"`` fans the greedy out on device and batches the
-    local-search rounds (monotone, but ``-LS`` results may differ from the
-    sequential reference). ``prep`` may be passed to reuse the precompute
-    across calls (it must match ``(inst, profile, platform, k)``).
-    """
-    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
-    if prep is None:
-        prep = prepare_instance(inst, profile, platform, k=k)
-    if not prep.feasible and any(n != "asap" for n in names):
-        raise ValueError("infeasible: deadline below ASAP makespan")
-
+def _needed_combos(names) -> list[tuple[str, bool, bool]]:
     need = []
     for name in names:
         if name == "asap":
@@ -162,28 +248,13 @@ def schedule_portfolio(inst: Instance, profile: PowerProfile,
         key = (v.score, v.weighted, v.refined)
         if key not in need:
             need.append(key)
-    if engine == "numpy":
-        greedy = _greedy_starts_numpy(prep, need)
-    elif engine == "jax":
-        greedy = _greedy_starts_jax(prep, need) if need else {}
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
+    return need
 
+
+def _assemble(names, prep: PreparedInstance, greedy: dict, ls_done: dict,
+              mu: int, validate: bool) -> dict[str, ScheduleResult]:
+    """Finish a portfolio pass: -LS fallbacks, validation, costs."""
     out: dict[str, ScheduleResult] = {}
-    ls_names = [n for n in names
-                if n != "asap" and VARIANTS_BY_NAME[n].ls]
-    ls_done: dict[str, tuple[np.ndarray, float]] = {}
-    if engine == "jax" and ls_names:
-        from repro.core.local_search_jax import local_search_portfolio
-        t0 = time.perf_counter()
-        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
-        stack = np.stack([greedy[(v.score, v.weighted, v.refined)][0]
-                          for v in keys])
-        improved = local_search_portfolio(inst, profile, stack, mu=mu,
-                                          ctx=prep.ls)
-        dt = (time.perf_counter() - t0) / len(ls_names)
-        ls_done = {n: (improved[i], dt) for i, n in enumerate(ls_names)}
-
     for name in names:
         if name == "asap":
             t0 = time.perf_counter()
@@ -198,15 +269,175 @@ def schedule_portfolio(inst: Instance, profile: PowerProfile,
                     start, secs = ls_start, secs + ls_secs
                 else:
                     t0 = time.perf_counter()
-                    start = local_search(inst, profile, platform, start,
-                                         mu=mu, ctx=prep.ls)
+                    start = local_search(prep.inst, prep.profile,
+                                         prep.platform, start, mu=mu,
+                                         ctx=prep.ls)
                     secs += time.perf_counter() - t0
         if validate:
-            validate_schedule(inst, profile, start)
+            validate_schedule(prep.inst, prep.profile, start)
         out[name] = ScheduleResult(
             variant=name, start=start,
-            cost=schedule_cost(inst, profile, start), seconds=secs)
+            cost=schedule_cost(prep.inst, prep.profile, start), seconds=secs)
     return out
+
+
+def schedule_portfolio(inst: Instance, profile: PowerProfile,
+                       platform: Platform, variants=None, k: int = 3,
+                       mu: int = 10, validate: bool = True,
+                       engine: str = "numpy",
+                       prep: PreparedInstance | None = None
+                       ) -> dict[str, ScheduleResult]:
+    """Schedule all requested variants (default: asap + all 16) in one pass.
+
+    ``engine="numpy"`` is bit-identical to the per-variant ``schedule()``
+    loop; ``engine="jax"`` fans the greedy out on device and batches the
+    local-search rounds (monotone, polished to sequential-reference local
+    optimality, but ``-LS`` results may differ from the sequential
+    reference). ``prep`` may be passed to reuse the precompute across calls
+    (it must match ``(inst, profile, platform, k)``).
+    """
+    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
+    if prep is None:
+        prep = prepare_instance(inst, profile, platform, k=k)
+    if not prep.feasible and any(n != "asap" for n in names):
+        raise ValueError("infeasible: deadline below ASAP makespan")
+
+    need = _needed_combos(names)
+    if engine == "numpy":
+        greedy = _greedy_starts_numpy(prep, need)
+    elif engine == "jax":
+        greedy = _greedy_starts_jax(prep, need) if need else {}
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    ls_names = [n for n in names
+                if n != "asap" and VARIANTS_BY_NAME[n].ls]
+    ls_done: dict[str, tuple[np.ndarray, float]] = {}
+    if engine == "jax" and ls_names:
+        from repro.core.local_search_jax import local_search_portfolio_multi
+        t0 = time.perf_counter()
+        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
+        stack = np.stack([greedy[(v.score, v.weighted, v.refined)][0]
+                          for v in keys])
+        budgets = np.broadcast_to(prep.overlay.unit_budget,
+                                  (len(ls_names), profile.T))
+        # ctx = the graph dict, so the dense-adjacency cache of the device
+        # climb survives across profiles (the overlay's ls dict is a
+        # per-profile copy)
+        improved = local_search_portfolio_multi(
+            inst, profile.T, budgets, stack, mu=mu, ctx=prep.graph.ls_graph)
+        dt = (time.perf_counter() - t0) / len(ls_names)
+        ls_done = {n: (improved[i], dt) for i, n in enumerate(ls_names)}
+
+    return _assemble(names, prep, greedy, ls_done, mu, validate)
+
+
+def schedule_portfolio_multi(inst: Instance, profiles, platform: Platform,
+                             variants=None, k: int = 3, mu: int = 10,
+                             validate: bool = True, engine: str = "numpy",
+                             graph: PreparedGraph | None = None
+                             ) -> list[dict[str, ScheduleResult]]:
+    """One instance x N profiles x all variants; the replanning fan-out.
+
+    The profile-independent precompute runs once; each profile only pays
+    its overlay. Under ``engine="jax"`` ALL (profile, variant) greedy runs
+    are one device launch and all (profile, ``-LS``-variant) hill climbs
+    advance as one batched climb. Returns one ``{variant: ScheduleResult}``
+    dict per profile, each bit-identical to ``schedule_portfolio(inst,
+    profile_i, platform, engine=engine)``.
+    """
+    profiles = list(profiles)
+    if not profiles:
+        return []
+    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
+    if graph is None:
+        graph = prepare_graph(inst, platform, profiles[0].T, k=k)
+    overlays = [overlay_profile(graph, p) for p in profiles]
+    preps = [PreparedInstance(graph=graph, overlay=ov) for ov in overlays]
+    if not graph.feasible and any(n != "asap" for n in names):
+        raise ValueError("infeasible: deadline below ASAP makespan")
+
+    if engine == "numpy":
+        return [schedule_portfolio(inst, p.profile, platform,
+                                   variants=names, k=k, mu=mu,
+                                   validate=validate, prep=p)
+                for p in preps]
+    if engine != "jax":
+        raise ValueError(f"unknown engine {engine!r}")
+
+    from repro.core.greedy_jax import greedy_fanout_multi_jax
+    from repro.core.local_search_jax import local_search_portfolio_multi
+
+    need = _needed_combos(names)
+    P = len(profiles)
+    greedys: list[dict] = [{} for _ in range(P)]
+    if need:
+        t0 = time.perf_counter()
+        budgets = np.stack([ov.unit_budget for ov in overlays])
+        masks = np.stack([np.stack([ov.masks[r] for (_, _, r) in need])
+                          for ov in overlays])
+        orders = np.stack([graph.order_for(s, w) for (s, w, _) in need])
+        starts = np.asarray(greedy_fanout_multi_jax(
+            inst, graph.T, budgets, masks, orders,
+            shared=graph.shared()), dtype=np.int64)
+        dt = (time.perf_counter() - t0) / (P * len(need))
+        for pi in range(P):
+            greedys[pi] = {c: (starts[pi, i], dt)
+                           for i, c in enumerate(need)}
+
+    ls_names = [n for n in names
+                if n != "asap" and VARIANTS_BY_NAME[n].ls]
+    ls_dones: list[dict] = [{} for _ in range(P)]
+    if ls_names:
+        t0 = time.perf_counter()
+        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
+        rows = np.stack([greedys[pi][(v.score, v.weighted, v.refined)][0]
+                         for pi in range(P) for v in keys])
+        row_budgets = np.stack([overlays[pi].unit_budget
+                                for pi in range(P) for _ in keys])
+        improved = local_search_portfolio_multi(
+            inst, graph.T, row_budgets, rows, mu=mu, ctx=graph.ls_graph)
+        dt = (time.perf_counter() - t0) / len(rows)
+        for pi in range(P):
+            ls_dones[pi] = {n: (improved[pi * len(keys) + i], dt)
+                            for i, n in enumerate(ls_names)}
+
+    return [_assemble(names, preps[pi], greedys[pi], ls_dones[pi], mu,
+                      validate)
+            for pi in range(P)]
+
+
+def portfolio_cost_matrix(results, variants=None):
+    """[P, V] cost matrix from :func:`schedule_portfolio_multi` output.
+
+    Returns ``(costs, names)``; ``costs[p, v]`` is profile p's carbon cost
+    under variant ``names[v]``. The robust (min over variants of max over
+    profiles) pick is ``names[costs.max(axis=0).argmin()]``.
+    """
+    if not results:
+        return np.zeros((0, 0), dtype=np.int64), ()
+    names = tuple(variants) if variants is not None else tuple(results[0])
+    costs = np.array([[res[n].cost for n in names] for res in results],
+                     dtype=np.int64)
+    return costs, names
+
+
+def robust_pick(costs: np.ndarray, names) -> tuple[str, int]:
+    """The min-max variant of an ensemble cost matrix.
+
+    Returns ``(variant, worst_cost)``: the heuristic variant whose worst
+    cost across the ensemble rows is smallest. The ``asap`` baseline only
+    competes when it is the sole variant requested (a gate pinned to the
+    baseline still gets a plan).
+    """
+    names = tuple(names)
+    if not names or not len(costs):
+        raise ValueError("empty cost matrix")
+    heur = [i for i, n in enumerate(names) if n != "asap"] \
+        or list(range(len(names)))
+    worst = np.asarray(costs)[:, heur].max(axis=0)
+    j = int(worst.argmin())
+    return names[heur[j]], int(worst[j])
 
 
 # ---------------------------------------------------------------------------
@@ -214,42 +445,45 @@ def schedule_portfolio(inst: Instance, profile: PowerProfile,
 # ---------------------------------------------------------------------------
 
 def _shape_key(prep: PreparedInstance) -> tuple:
-    (eu, _, _), (fu, _, _) = prep.buckets()
-    return (prep.inst.num_tasks, prep.profile.T, eu.shape, fu.shape)
+    from repro.core.greedy_jax import pad_dims
+    return pad_dims(prep.inst.num_tasks, prep.profile.T)
 
 
 def portfolio_starts_batch(preps: list[PreparedInstance],
                            combos=_COMBOS) -> list[np.ndarray]:
     """Greedy starts for a batch of instances x all variants on device.
 
-    Instances are grouped by padded shape key (N, T, level-bucket shapes);
-    each group runs as ONE doubly-vmapped jitted call. Returns, aligned with
-    ``preps``, int64 arrays of shape [len(combos), N].
+    Instances are grouped by padded shape bucket (:func:`repro.core
+    .greedy_jax.pad_dims`); each group runs as ONE doubly-vmapped jitted
+    call. Returns, aligned with ``preps``, int64 arrays of shape
+    [len(combos), N_i].
     """
     import jax.numpy as jnp
 
-    from repro.core.greedy_jax import _device_inputs, _impl
+    from repro.core.greedy_jax import _impl, pad_budget, pad_masks, \
+        pad_orders
 
     results: list[np.ndarray | None] = [None] * len(preps)
     groups: dict[tuple, list[int]] = {}
     for i, p in enumerate(preps):
         groups.setdefault(_shape_key(p), []).append(i)
-    for idx in groups.values():
+    for (_, Tp), idx in groups.items():
         rows = []
         for i in idx:
             p = preps[i]
-            shared = _device_inputs(p.inst, p.profile, p.est0, p.lst0,
-                                    p.buckets())
-            masks = jnp.asarray(np.stack(
-                [p.masks[r] for (_, _, r) in combos]))
-            orders = jnp.asarray(np.stack(
-                [p.orders[(s, w)] for (s, w, _) in combos]), jnp.int32)
-            (dur, work, eu, ev, eok, fu, fv, fok, rem0, est_j, lst_j) = shared
-            rows.append((dur, work, eu, ev, eok, fu, fv, fok,
-                         rem0, masks, est_j, lst_j, orders))
+            dur, work, lp, est_j, lst_j, tail = p.graph.shared()
+            masks = pad_masks(np.stack(
+                [p.masks[r] for (_, _, r) in combos]), Tp)
+            orders = pad_orders(np.stack(
+                [p.graph.order_for(s, w) for (s, w, _) in combos]), tail)
+            rem0 = pad_budget(
+                p.profile.unit_budget(p.inst.idle_total), Tp)
+            rows.append((dur, work, lp, jnp.asarray(rem0),
+                         jnp.asarray(masks), est_j, lst_j,
+                         jnp.asarray(orders)))
         stacked = tuple(jnp.stack([r[a] for r in rows])
-                        for a in range(13))
+                        for a in range(8))
         starts = np.asarray(_impl()["batch"](*stacked), dtype=np.int64)
         for b, i in enumerate(idx):
-            results[i] = starts[b]
+            results[i] = starts[b][:, :preps[i].inst.num_tasks]
     return results

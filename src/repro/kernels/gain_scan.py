@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: local-search gain sweep (paper §5.3, batched).
+"""Local-search gain sweep (paper §5.3, batched): Pallas TPU kernel + an
+exact jnp twin that serves CPU and the device-resident hill climb.
 
 For every task i and every shift delta in [-mu, mu], computes the exact
 carbon-cost gain of moving task i by delta, given the current remaining-
@@ -9,8 +10,18 @@ lane-aligned windows of the timeline per task,
 
     win_s[i, j] = rem[s_i - PAD + j],   win_e[i, j] = rem[e_i - PAD + j],
 
-and the kernel evaluates all 2*mu+1 shifts for a tile of tasks at once:
-(TASK_TILE, W) VPU ops per shift, W = 128 lanes.
+and evaluates all 2*mu+1 shifts for every task at once. Two executors over
+the same windows (``repro.kernels.backend.resolve_mode`` picks one):
+
+* ``_kernel`` — the Pallas kernel: (TASK_TILE, W) VPU ops per shift,
+  W = 128 lanes, one masked reduction per delta.
+* :func:`gains_from_windows` — the jnp twin: every delta's masked window
+  sum is a contiguous range, so all 2*mu+1 gains fall out of four prefix
+  sums (O(N*mu) instead of O(N*W*mu)). All summands are integers below
+  2^24, so f32 accumulation is exact in any order and the two paths are
+  bit-identical (tested). This is the CPU fast path (the interpreter walks
+  the kernel python-step by python-step) and the gain oracle of the
+  device-resident climb in :mod:`repro.core.local_search_jax`.
 
 Gain identities (rem includes the task at its old position; the newly
 occupied region never overlaps the old window, so rem == rem-without-task
@@ -27,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.backend import resolve_interpret
+from repro.kernels.backend import resolve_mode
 
 TASK_TILE = 256
 W = 128          # lane-aligned window length; supports mu <= 42
@@ -84,6 +95,71 @@ def _kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref, hi_ref,
                            constant_values=NEG)
 
 
+def gather_windows(rem, start, dur, *, mu: int):
+    """(win_s, win_e) f32[N, W] timeline windows around start and end."""
+    t_total = rem.shape[0]
+    rem_pad = jnp.pad(rem, (W, W))
+    idx = jnp.arange(W)[None, :] - mu
+    s_i = start.astype(jnp.int32)
+    e_i = (start + dur).astype(jnp.int32)
+    win_s = rem_pad[jnp.clip(s_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
+    win_e = rem_pad[jnp.clip(e_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
+    return win_s, win_e
+
+
+def gains_from_windows(win_s, win_e, work, dur, lo_rel, hi_rel, *, mu: int):
+    """The kernel's gain matrix from pre-gathered windows, in pure jnp.
+
+    Every delta's vacated/occupied region is a contiguous index range in
+    its window, so the masked sums collapse to differences of four prefix
+    sums. Bit-identical to ``_kernel`` (integer summands, exact in f32).
+
+    Args:
+      win_s, win_e: f32[N, W] from :func:`gather_windows`.
+      work, dur:    f32[N].
+      lo_rel, hi_rel: f32[N] legal shift bounds RELATIVE to the current
+        start (lo_rel > hi_rel marks a row with no legal move).
+    Returns:
+      f32[N, 2*mu+1]; illegal moves = -1e30.
+    """
+    pad = mu
+    w = work[:, None]
+    released_s = jnp.minimum(jnp.maximum(-win_s, 0.0), w)
+    released_e = jnp.minimum(jnp.maximum(-win_e, 0.0), w)
+    incurred_s = jnp.minimum(jnp.maximum(w - jnp.maximum(win_s, 0.0), 0.0), w)
+    incurred_e = jnp.minimum(jnp.maximum(w - jnp.maximum(win_e, 0.0), 0.0), w)
+
+    def csum(x):                                  # [N, W] -> [N, W+1]
+        z = jnp.zeros((x.shape[0], 1), x.dtype)
+        return jnp.concatenate([z, jnp.cumsum(x, axis=1)], axis=1)
+
+    r_s, r_e = csum(released_s), csum(released_e)
+    i_s, i_e = csum(incurred_s), csum(incurred_e)
+
+    delta = jnp.arange(-mu, mu + 1, dtype=jnp.int32)[None, :]   # [1, D]
+    ln = jnp.minimum(jnp.abs(delta), dur[:, None].astype(jnp.int32))
+
+    def take(c, i):
+        # indices of the inapplicable delta branch may leave [0, W]; they
+        # are masked out below, so clip them into range first
+        return jnp.take_along_axis(c, jnp.clip(i, 0, W), axis=1)
+
+    # delta > 0: vacated [pad, pad+ln) of win_s, occupied
+    # [pad+delta-ln, pad+delta) of win_e
+    g_pos = (take(r_s, pad + ln) - r_s[:, pad:pad + 1]) \
+        - (take(i_e, pad + delta) - take(i_e, pad + delta - ln))
+    # delta < 0: vacated [pad-ln, pad) of win_e, occupied
+    # [pad+delta, pad+delta+ln) of win_s
+    g_neg = (r_e[:, pad:pad + 1] - take(r_e, pad - ln)) \
+        - (take(i_s, pad + delta + ln) - take(i_s, pad + delta))
+    gain = jnp.where(delta > 0, g_pos, jnp.where(delta < 0, g_neg, 0.0))
+
+    deltaf = delta.astype(win_s.dtype)
+    legal = ((lo_rel[:, None] <= deltaf) & (deltaf <= hi_rel[:, None])
+             & (delta != 0) & (work[:, None] > 0))
+    return jnp.where(legal, gain, NEG)
+
+
 @functools.partial(jax.jit, static_argnames=("mu", "interpret"))
 def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
               interpret: bool | None = None):
@@ -94,29 +170,25 @@ def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
       start, dur, work: f32[N].
       lo, hi: f32[N] legal *absolute* start-time bounds per task.
       mu: max shift.
-      interpret: None = auto (interpret iff the backend is CPU).
+      interpret: None = auto (jnp twin on CPU, compiled kernel on TPU);
+        True = Pallas interpreter; False = compiled kernel.
     Returns:
       f32[N, 2*mu+1]; entry (i, d) = gain of moving task i by (d - mu);
       illegal moves = -1e30.
     """
-    interpret = resolve_interpret(interpret)
-    (n,) = start.shape
-    t_total = rem.shape[0]
-
-    # lane-aligned windows around start and end (wrapper-side gather)
-    rem_pad = jnp.pad(rem, (W, W))
-    idx = jnp.arange(W)[None, :] - mu
-    s_i = start.astype(jnp.int32)
-    e_i = (start + dur).astype(jnp.int32)
-    win_s = rem_pad[jnp.clip(s_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
-    win_e = rem_pad[jnp.clip(e_i[:, None] + idx + W, 0, t_total + 2 * W - 1)]
+    win_s, win_e = gather_windows(rem, start, dur, mu=mu)
     return _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi,
                               mu=mu, interpret=interpret)
 
 
-def _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi, *, mu, interpret):
-    """One pallas launch over pre-gathered (N, W) timeline windows."""
+def _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi, *, mu,
+                       interpret):
+    """Gain matrix over pre-gathered (N, W) windows; mode-dispatched."""
     assert mu <= (W // 2) - 22, f"mu={mu} too large for W={W}"
+    mode = resolve_mode(interpret)
+    if mode == "jnp":
+        return gains_from_windows(win_s, win_e, work, dur, lo - start,
+                                  hi - start, mu=mu)
     (n,) = start.shape
     n_pad = -n % TASK_TILE
 
@@ -146,7 +218,7 @@ def _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi, *, mu, interpret)
         ],
         out_specs=pl.BlockSpec((TASK_TILE, d_out), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n + n_pad, d_out), jnp.float32),
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )(win_s, win_e, w2, dur2, lo2, hi2)
     return out[:n, :2 * mu + 1]
 
@@ -157,20 +229,20 @@ def gain_scan_batched(rem, start, dur, work, lo, hi, *, mu: int = 10,
     """Gains for a whole portfolio of schedules in ONE kernel launch.
 
     The kernel body is per-task-independent once the timeline windows are
-    gathered, so a batch of B schedules over the same instance flattens into
-    a (B*N)-task problem: windows are gathered per (batch row, task) from
-    that row's timeline, and a single ``pallas_call`` grid covers all rows.
+    gathered, so a batch of B schedules (portfolio variants, ensemble
+    profiles, or both flattened) becomes a (B*N)-task problem: windows are
+    gathered per (batch row, task) from that row's timeline, and a single
+    launch covers all rows.
 
     Args:
       rem:  f32[B, T] per-row remaining-budget timelines.
       start, lo, hi: f32[B, N] per-row schedules / legal bounds.
       dur, work: f32[N], shared across rows (same instance).
       mu: max shift.
-      interpret: None = auto (interpret iff the backend is CPU).
+      interpret: None = auto (see :func:`gain_scan`).
     Returns:
       f32[B, N, 2*mu+1].
     """
-    interpret = resolve_interpret(interpret)
     B, n = start.shape
     win = jnp.arange(W)[None, None, :] - mu                   # (1, 1, W)
     rem_pad = jnp.pad(rem, ((0, 0), (W, W)))

@@ -10,6 +10,11 @@ or wall-clock) until each chunk's scheduled start.
 
 Multi-pod runs build one chain per pod over the same profile; cross-pod
 checkpoint barriers become chain-to-chain edges.
+
+Forecasts are uncertain: the gate optionally plans against an ensemble of
+perturbed profiles (``profiles=...``) through the multi-profile portfolio
+engine — every variant scored against every member in one device launch —
+and executes the robust (min-max) variant.
 """
 from __future__ import annotations
 
@@ -19,8 +24,9 @@ import numpy as np
 
 from repro.cluster import Platform
 from repro.core.carbon import PowerProfile, schedule_cost
-from repro.core.cawosched import schedule
 from repro.core.dag import FixedMapping, Instance, build_instance
+from repro.core.portfolio import portfolio_cost_matrix, robust_pick, \
+    schedule_portfolio_multi
 from repro.workflows.generators import Workflow
 
 
@@ -92,18 +98,40 @@ class GatePlan:
     instance: Instance
     profile: PowerProfile
     start: np.ndarray           # scheduled chunk start times (seconds)
-    cost: int
+    cost: int                   # cost under the nominal profile
     asap_cost: int
+    variant: str = ""           # the variant the plan executes
+    robust_cost: int | None = None    # chosen variant's worst ensemble cost
+    cost_matrix: np.ndarray | None = None   # [P, V] ensemble x variant costs
+    variant_names: tuple = ()
 
 
 class CarbonGate:
-    """Plan + gate execution of training-step chunks into green windows."""
+    """Plan + gate execution of training-step chunks into green windows.
+
+    ``profiles`` optionally extends the nominal forecast with a
+    perturbation ensemble (forecast-uncertainty members). Planning then
+    runs the multi-profile portfolio engine — every variant against every
+    member, one device launch under ``engine="jax"`` — and executes the
+    *robust* variant: the one minimizing the worst-case cost across the
+    ensemble. ``variant`` pins a specific heuristic instead ("auto" =
+    robust pick; with a single profile "auto" simply picks the cheapest).
+    """
 
     def __init__(self, profile: PowerProfile, platform: Platform,
-                 variant: str = "pressWR-LS"):
+                 variant: str = "pressWR-LS",
+                 profiles: list[PowerProfile] | None = None,
+                 engine: str = "auto"):
         self.profile = profile
         self.platform = platform
         self.variant = variant
+        self.profiles = [profile] + [p for p in (profiles or [])
+                                     if p is not profile]
+        if engine == "auto":
+            # replanning loops amortize the jit cache; the device fan-out
+            # pays off as soon as there is an ensemble to score
+            engine = "jax" if len(self.profiles) > 1 else "numpy"
+        self.engine = engine
         self.plan: GatePlan | None = None
 
     def make_plan(self, chunk_seconds: list[list[int]],
@@ -112,11 +140,20 @@ class CarbonGate:
             [len(c) for c in chunk_seconds], chunk_seconds, barriers)
         inst = build_instance(wf, mapping, self.platform,
                               dur=wf.node_w)
-        res = schedule(inst, self.profile, self.platform, self.variant)
-        asap = schedule(inst, self.profile, self.platform, "asap")
-        self.plan = GatePlan(instance=inst, profile=self.profile,
-                             start=res.start, cost=res.cost,
-                             asap_cost=asap.cost)
+        variants = None if self.variant == "auto" \
+            else tuple(dict.fromkeys(("asap", self.variant)))
+        results = schedule_portfolio_multi(
+            inst, self.profiles, self.platform, variants=variants,
+            engine=self.engine)
+        costs, names = portfolio_cost_matrix(results)
+        chosen, worst_cost = robust_pick(costs, names)
+        nominal = results[0]
+        self.plan = GatePlan(
+            instance=inst, profile=self.profile,
+            start=nominal[chosen].start, cost=nominal[chosen].cost,
+            asap_cost=nominal["asap"].cost, variant=chosen,
+            robust_cost=worst_cost, cost_matrix=costs,
+            variant_names=names)
         return self.plan
 
     def wait_time(self, pod: int, chunk: int, now: float) -> float:
