@@ -7,13 +7,28 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke
+.PHONY: test test-device test-host bench bench-smoke planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
+
+# jax-engine / device fan-out tests only (the `device` pytest marker)
+test-device:
+	$(PY) -m pytest -x -q -m device
+
+# everything but the device tests (quick CPU-only signal)
+test-host:
+	$(PY) -m pytest -x -q -m "not device"
 
 bench:
 	$(PY) -m benchmarks.run --only portfolio
 
 bench-smoke:
 	$(PY) -m benchmarks.run --only portfolio --smoke
+
+planner-smoke:
+	$(PY) -c "from repro.api import LocalSearchConfig, Planner, \
+	PlanRequest, PlanResult, PlanningSession; print('planner api: ok')"
+
+# the PR gate: tier-1 tests + Planner import smoke + tier-2 bench refresh
+verify: test planner-smoke bench-smoke

@@ -19,8 +19,8 @@ from repro.core import (
     deadline_from_asap,
     generate_profile,
     heft_mapping,
-    schedule,
     schedule_portfolio,
+    schedule_reference,
 )
 from repro.workflows import WORKFLOW_KINDS, make_workflow, wfgen_scale
 
@@ -97,11 +97,13 @@ def run_all_variants(case: InstanceCase, variants=None, mu: int = 10,
 
 
 def run_variant_loop(case: InstanceCase, variants=None, mu: int = 10):
-    """The pre-portfolio path: one ``schedule()`` call per variant (kept as
-    the portfolio engine's equivalence/timing baseline)."""
+    """The pre-portfolio seed-style path: one sequential-reference run per
+    variant (``schedule_reference`` — ``schedule()`` itself is a Planner
+    shim now, so the reference keeps this baseline honest)."""
     out = {}
     for v in ("asap",) + tuple(variants or VARIANT_NAMES):
-        r = schedule(case.inst, case.profile, case.platform, v, mu=mu)
+        r = schedule_reference(case.inst, case.profile, case.platform, v,
+                               mu=mu)
         out[v] = (r.cost, r.seconds)
     return out
 

@@ -14,6 +14,12 @@ Emits ``benchmarks/out/BENCH_portfolio.json``:
     interpreter-mode gain kernel);
   * ``multi_profile`` — ``schedule_portfolio_multi`` over an ensemble of
     perturbed profiles vs looping ``schedule_portfolio`` per profile;
+  * ``planner`` — the Planner facade's overhead over the grid engine it
+    wraps (request normalization + cache lookup + result assembly), the
+    legacy-shim path for reference, and the combined instance x profile
+    fan-out: cells, shape buckets, and the grid jit cache-miss counts
+    proving one device launch per bucket (cold) and zero retracing
+    (steady);
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -83,6 +89,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
 
     t_jax = t_jax_cold = None
     multi = None
+    planner_stats = None
     if with_jax:
         t0 = time.perf_counter()
         for c in cases:
@@ -123,6 +130,75 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
             "speedup_multi_over_loop": t_mloop / t_multi,
         }
 
+        # --- Planner facade: overhead over the grid engine it wraps, and
+        # the combined instance x profile fan-out as ONE bucketed launch
+        from repro.api import Planner, PlanRequest
+        from repro.core.greedy_jax import _impl, pad_dims
+        from repro.core.portfolio import schedule_portfolio_grid
+
+        reps = 5
+        planner = Planner(c.platform, engine="jax")
+        req = PlanRequest(instances=c.inst, profiles=profs)
+        planner.plan(req)                       # warm cache + executables
+        graph = planner.prepared(c.inst, profs[0].T)
+        contenders = {
+            "facade": lambda: planner.plan(req),
+            "grid": lambda: schedule_portfolio_grid(
+                [c.inst], [profs], c.platform, engine="jax",
+                graphs=[graph]),
+            "legacy": lambda: schedule_portfolio_multi(     # graph seeded
+                c.inst, profs, c.platform, engine="jax", graph=graph),
+        }
+        samples = {k: [] for k in contenders}
+        keys = list(contenders)
+        for rep in range(reps):                 # rotate order: de-bias
+            for k in keys[rep % 3:] + keys[:rep % 3]:       # load drift
+                t0 = time.perf_counter()
+                contenders[k]()
+                samples[k].append(time.perf_counter() - t0)
+        t_facade, t_grid, t_legacy = (float(np.median(samples[k]))
+                                      for k in keys)
+
+        # combined grid: 2 instances sharing one shape bucket x ensemble
+        # x 17 variants; the greedy fan-out must be ONE device launch per
+        # bucket (verified by the jit cache-miss count)
+        profs_b = [generate_profile(c.profile.scenario, c.profile.T,
+                                    c.platform, J=48, seed=300 + s)
+                   for s in range(n_profiles)]
+        insts = [c.inst, c.inst]
+        grid_req = PlanRequest(instances=insts,
+                               profiles=[profs, profs_b])
+        buckets = {pad_dims(i.num_tasks, profs[0].T) for i in insts}
+        grid_fn = _impl()["grid"]
+        before = grid_fn._cache_size()
+        planner.plan(grid_req)                  # cold: compiles per bucket
+        misses_cold = grid_fn._cache_size() - before
+        before = grid_fn._cache_size()
+        t0 = time.perf_counter()
+        res = planner.plan(grid_req)
+        t_combined = time.perf_counter() - t0
+        misses_steady = grid_fn._cache_size() - before
+        assert misses_cold == len(buckets), (misses_cold, buckets)
+        assert misses_steady == 0               # steady: zero retracing
+        n_cells = res.costs.size
+        planner_stats = {
+            "case": c.name,
+            "facade_us": t_facade * 1e6,
+            "grid_direct_us": t_grid * 1e6,
+            "legacy_shim_us": t_legacy * 1e6,
+            "facade_overhead_frac": t_facade / t_grid - 1.0,
+            "combined_grid": {
+                "n_instances": len(insts),
+                "n_profiles": n_profiles,
+                "n_variants": res.costs.shape[2],
+                "cells": int(n_cells),
+                "shape_buckets": len(buckets),
+                "jit_cache_misses_cold": int(misses_cold),
+                "jit_cache_misses_steady": int(misses_steady),
+                "steady_us_per_cell": t_combined / n_cells * 1e6,
+            },
+        }
+
     n = len(cases)
     matrix = {"sizes": list(sizes), "clusters": list(clusters),
               "n_cases": n, "n_profiles": n_profiles}
@@ -141,6 +217,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         "jax_fanout_us_per_instance_before":
             JAX_FANOUT_BEFORE_US if on_reference else None,
         "multi_profile": multi,
+        "planner": planner_stats,
         "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -155,6 +232,13 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         emit("portfolio_multi", multi["multi_jax_us_per_profile"],
              f"multi/loop={multi['speedup_multi_over_loop']:.2f}x"
              f";profiles={n_profiles}")
+    if planner_stats:
+        g = planner_stats["combined_grid"]
+        emit("planner_facade", planner_stats["facade_us"],
+             f"overhead={planner_stats['facade_overhead_frac'] * 100:.1f}%"
+             f";grid_cells={g['cells']}"
+             f";buckets={g['shape_buckets']}"
+             f";cold_misses={g['jit_cache_misses_cold']}")
     return payload
 
 

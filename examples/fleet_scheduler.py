@@ -6,11 +6,16 @@ jobs across 2 pods becomes a fixed-mapping workflow whose task durations
 come from those estimates, and CaWoSched shifts the jobs into green
 windows.
 
-Carbon forecasts are uncertain, so each fleet instance is planned against
-an ENSEMBLE of 8 perturbed profiles through ``schedule_portfolio_multi``
-(the graph precompute runs once per instance; every profile only pays its
-overlay) and the ROBUST variant is picked per instance: the one whose
-worst cost across the ensemble is smallest (min-max).
+Carbon forecasts are uncertain, so BOTH fleets x their 8-member perturbed
+forecast ensembles x all 17 variants are planned as ONE ``Planner.plan``
+call — the combined (instances x profiles x variants) grid; under the jax
+engine every shape bucket of the grid is a single triple-vmapped device
+launch. Per fleet the ROBUST variant is executed: the one whose worst
+cost across the ensemble is smallest (min-max).
+
+A :class:`~repro.api.PlanningSession` then replans fleet 0 over a rolling
+3-window horizon — window k+1's plan is computed on a background worker
+while window k "executes".
 
     PYTHONPATH=src python examples/fleet_scheduler.py
 """
@@ -21,8 +26,8 @@ import os
 
 import numpy as np
 
-from repro.core import generate_profile, portfolio_cost_matrix, \
-    robust_pick, schedule_portfolio_multi
+from repro.api import Planner, PlanRequest, window_profile
+from repro.core import generate_profile
 from repro.core.dag import build_instance
 from repro.runtime.carbon_gate import chunk_workflow, fleet_platform
 
@@ -30,6 +35,7 @@ DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
                       "dryrun")
 
 N_ENSEMBLE = 8
+N_WINDOWS = 3
 
 
 def step_seconds(arch: str, shape: str) -> float:
@@ -66,43 +72,76 @@ def chunks(jobs):
     return out
 
 
+def build_fleet(plat, jobs0, jobs1):
+    c0, c1 = chunks(jobs0), chunks(jobs1)
+    wf, mapping = chunk_workflow([len(c0), len(c1)], [c0, c1])
+    inst = build_instance(wf, mapping, plat, dur=wf.node_w)
+    horizon = int(2.5 * max(sum(c0), sum(c1)))
+    return inst, horizon
+
+
 def main():
     plat = fleet_platform(pods=2, chip_watts_idle=100, chip_watts_work=250,
                           chips_per_pod=256)
+    names, instances, ensembles = [], [], []
     for name, (jobs0, jobs1) in FLEETS.items():
-        c0, c1 = chunks(jobs0), chunks(jobs1)
-        wf, mapping = chunk_workflow([len(c0), len(c1)], [c0, c1])
-        inst = build_instance(wf, mapping, plat, dur=wf.node_w)
-        horizon = int(2.5 * max(sum(c0), sum(c1)))
+        inst, horizon = build_fleet(plat, jobs0, jobs1)
         # ensemble: one nominal forecast + perturbed members (same interval
         # grid, resampled budget noise — forecast uncertainty)
-        profiles = [generate_profile("S3", horizon, plat, J=48, seed=3 + s,
-                                     work_capacity=int(plat.p_work[:2].sum()))
-                    for s in range(N_ENSEMBLE)]
+        profs = [generate_profile("S3", horizon, plat, J=48, seed=3 + s,
+                                  work_capacity=int(plat.p_work[:2].sum()))
+                 for s in range(N_ENSEMBLE)]
+        names.append(name)
+        instances.append(inst)
+        ensembles.append(profs)
 
-        # one multi-profile pass: ASAP + all 16 variants x all 8 members
-        # share the per-instance graph precompute
-        results = schedule_portfolio_multi(inst, profiles, plat)
-        costs, names = portfolio_cost_matrix(results)
-        robust, worst_cost = robust_pick(costs, names)
-        asap_worst = costs[:, names.index("asap")].max()
-        heur = [i for i, n in enumerate(names) if n != "asap"]
-        nominal_best = names[heur[int(np.argmin(costs[0, heur]))]]
+    # ONE plan call: both fleets x 8 members x 17 variants (the combined
+    # grid; per-fleet cells are bit-identical to planning each alone)
+    planner = Planner(plat, engine="auto")
+    res = planner.plan(PlanRequest(instances=instances, profiles=ensembles,
+                                   robust=True))
 
-        print(f"\n[{name}] horizon {horizon}s, {inst.num_tasks} chunk tasks,"
-              f" {N_ENSEMBLE} forecast members")
+    for i, name in enumerate(names):
+        inst, profs = instances[i], ensembles[i]
+        costs, vnames = res.cost_matrix(i)
+        robust, worst_cost = res.robust(i)
+        asap_worst = costs[:, vnames.index("asap")].max()
+        nominal_best = res.best(i, 0).variant
+
+        print(f"\n[{name}] horizon {profs[0].T}s, {inst.num_tasks} chunk "
+              f"tasks, {N_ENSEMBLE} forecast members "
+              f"(engine={res.engine})")
         print(f"  robust (min-max) variant: {robust} "
               f"(worst-member carbon {worst_cost}; ASAP worst {asap_worst},"
               f" {worst_cost / max(asap_worst, 1):.2f}x)")
         if nominal_best != robust:
             print(f"  nominal-only pick would be {nominal_best} "
                   f"(worst-member carbon "
-                  f"{costs[:, names.index(nominal_best)].max()})")
-        best = results[0][robust]
+                  f"{costs[:, vnames.index(nominal_best)].max()})")
+        best = res.pick(i)
         for pod, chain in enumerate(inst.proc_chains[:2]):
             starts = [int(best.start[t]) for t in chain]
             print(f"  pod{pod} chunk starts: {starts[:10]}"
                   f"{'...' if len(starts) > 10 else ''}")
+
+    # --- async rolling-horizon replanning of fleet 0 ----------------------
+    inst, W = instances[0], ensembles[0][0].T
+    long = generate_profile("S3", N_WINDOWS * W, plat, J=96, seed=42,
+                            work_capacity=int(plat.p_work[:2].sum()))
+
+    def wprofs(k):      # window slice + perturbed members, same horizon W
+        return [window_profile(long, k * W, W)] + [
+            generate_profile("S3", W, plat, J=48, seed=60 + 8 * k + j,
+                             work_capacity=int(plat.p_work[:2].sum()))
+            for j in range(3)]
+
+    print(f"\n[rolling horizon] fleet {names[0]}, {N_WINDOWS} windows of "
+          f"{W}s (window k+1 planned while k executes)")
+    with planner.session(inst, wprofs, n_windows=N_WINDOWS) as sess:
+        for k, plan in sess.windows():
+            robust, worst = plan.robust(0)
+            print(f"  window {k}: robust={robust} worst-member={worst} "
+                  f"(planned in {plan.seconds * 1e3:.0f} ms)")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,18 @@
 """Quickstart: schedule a scientific workflow carbon-aware in ~20 lines.
 
+One ``Planner.plan`` call evaluates the ASAP baseline plus all 16
+CaWoSched variants (paper §5) in a single amortized pass and returns the
+dense cost grid.
+
     PYTHONPATH=src python examples/quickstart.py
 """
+from repro.api import Planner, PlanRequest
 from repro.cluster import make_cluster
 from repro.core import (
-    ALL_VARIANTS,
     build_instance,
     deadline_from_asap,
     generate_profile,
     heft_mapping,
-    schedule,
 )
 from repro.workflows import make_workflow
 
@@ -27,13 +30,21 @@ def main():
     deadline = deadline_from_asap(inst, factor=2.0)
     profile = generate_profile("S1", deadline, platform, J=24, seed=2)
 
-    base = schedule(inst, profile, platform, "asap")
-    print(f"\nASAP baseline: carbon cost = {base.cost}")
+    planner = Planner(platform)                            # engine="auto"
+    res = planner.plan(PlanRequest(instances=inst, profiles=profile))
+
+    asap = res.result(variant="asap")
+    print(f"\nASAP baseline: carbon cost = {asap.cost}")
     print(f"{'variant':<12} {'cost':>10} {'vs ASAP':>8} {'ms':>7}")
-    for v in ALL_VARIANTS:
-        r = schedule(inst, profile, platform, v.name)
-        ratio = r.cost / base.cost if base.cost else 1.0
-        print(f"{v.name:<12} {r.cost:>10} {ratio:>8.3f} {r.seconds*1e3:>7.1f}")
+    for name in res.variants:
+        if name == "asap":
+            continue
+        r = res.result(variant=name)
+        ratio = r.cost / asap.cost if asap.cost else 1.0
+        print(f"{name:<12} {r.cost:>10} {ratio:>8.3f} {r.seconds*1e3:>7.1f}")
+    best = res.best()
+    print(f"\nbest variant: {best.variant} "
+          f"({best.cost / max(asap.cost, 1):.3f}x ASAP)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""Unified Planner API: one ``PlanRequest -> PlanResult`` surface.
+
+    from repro.api import Planner, PlanRequest
+
+    planner = Planner(platform)                      # engine="auto"
+    res = planner.plan(PlanRequest(instances=inst, profiles=ensemble))
+    best = res.best()                                # nominal cheapest
+    variant, worst = res.robust()                    # min-max across members
+
+covers every scheduling scenario — one variant, the 17-variant portfolio,
+forecast ensembles, whole instance suites — through one code path, and
+:class:`PlanningSession` adds async rolling-horizon replanning (plan
+window k+1 while window k executes).
+"""
+from repro.api.planner import Planner  # noqa: F401
+from repro.api.request import (  # noqa: F401
+    LocalSearchConfig,
+    PlanRequest,
+    crop_profile,
+    window_profile,
+)
+from repro.api.result import PlanResult  # noqa: F401
+from repro.api.session import PlanningSession  # noqa: F401

@@ -1,0 +1,127 @@
+"""The Planner facade: one ``plan(PlanRequest) -> PlanResult`` surface.
+
+``Planner(platform)`` owns everything amortizable across plan calls — a
+bounded cache of :class:`~repro.core.portfolio.PreparedGraph` precomputes
+(keyed by instance identity and horizon), the resolved engine, and the
+local-search configuration — and serves every request shape through ONE
+code path (:func:`repro.core.portfolio.schedule_portfolio_grid`):
+
+* ``1 x 1 x 1``  — one variant of one instance (legacy ``schedule``);
+* ``1 x 1 x 17`` — the full portfolio (legacy ``schedule_portfolio``);
+* ``1 x P x 17`` — a forecast ensemble (legacy
+  ``schedule_portfolio_multi``);
+* ``I x P x 17`` — a whole instance suite x ensemble grid, previously
+  unreachable: under the jax engine all (instance, profile, variant) rows
+  of a padded shape bucket launch as ONE triple-vmapped device call.
+
+``engine="auto"`` resolution is centralized in
+:func:`repro.kernels.backend.resolve_engine` — the same rule the kernels'
+``interpret=None`` tri-state routes through, so the facade and the
+kernels can never disagree on the active backend.
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+from repro.api.request import LocalSearchConfig, PlanRequest
+from repro.api.result import PlanResult
+from repro.core.portfolio import PreparedGraph, prepare_graph, \
+    schedule_portfolio_grid
+from repro.kernels.backend import resolve_engine
+
+
+class Planner:
+    """Compile instances once, then serve any (I x P x V) plan request.
+
+    Args:
+      platform: the fixed-mapping platform every request schedules on.
+      engine: ``"numpy"``, ``"jax"``, or ``"auto"`` (resolved per request
+        by :func:`repro.kernels.backend.resolve_engine`: the device
+        fan-out as soon as the request has more than one
+        (instance, profile) cell).
+      k: refined-subdivision granularity (paper's k).
+      ls: :class:`LocalSearchConfig` — mu, round budget, and the device
+        climb's commit width, threaded through every engine.
+      validate: assert precedence + deadline feasibility of every
+        produced schedule.
+      graph_cache: how many ``PreparedGraph`` precomputes to keep (FIFO).
+        A cached graph pins its instance, so equal ``id()`` keys cannot
+        collide while an entry lives.
+    """
+
+    def __init__(self, platform, engine: str = "auto", k: int = 3,
+                 ls: LocalSearchConfig | None = None, validate: bool = True,
+                 graph_cache: int = 32):
+        resolve_engine(engine)              # fail fast on unknown engines
+        self.platform = platform
+        self.engine = engine
+        self.k = int(k)
+        self.ls = ls if ls is not None else LocalSearchConfig()
+        self.validate = validate
+        self._graph_cache = int(graph_cache)
+        self._graphs: collections.OrderedDict[tuple, PreparedGraph] = \
+            collections.OrderedDict()
+
+    # --- PreparedGraph cache ---------------------------------------------
+
+    def prepared(self, inst, T: int) -> PreparedGraph:
+        """The cached profile-independent precompute of ``(inst, T)``."""
+        key = (id(inst), int(T), self.k)
+        g = self._graphs.get(key)
+        if g is not None and g.inst is inst:
+            self._graphs.move_to_end(key)
+            return g
+        g = prepare_graph(inst, self.platform, int(T), k=self.k)
+        self.seed_graph(g)
+        return g
+
+    def seed_graph(self, graph: PreparedGraph) -> None:
+        """Adopt an externally prepared graph (legacy ``prep=``/``graph=``
+        reuse); it must match this planner's platform and k."""
+        cap = max(self._graph_cache, 1)     # always hold the current graph
+        while self._graphs and len(self._graphs) >= cap:
+            self._graphs.popitem(last=False)
+        self._graphs[(id(graph.inst), graph.T, graph.k)] = graph
+
+    # --- planning --------------------------------------------------------
+
+    def plan(self, request: PlanRequest | None = None, /, **kw) -> PlanResult:
+        """Evaluate one request grid; see :class:`PlanRequest`.
+
+        ``plan(instances=..., profiles=..., ...)`` builds the request
+        inline; passing a prebuilt :class:`PlanRequest` is equivalent.
+        """
+        if request is None:
+            request = PlanRequest(**kw)
+        elif kw:
+            raise TypeError("pass a PlanRequest or keywords, not both")
+        t0 = time.perf_counter()
+        instances, grid, names = request.resolve()
+        I = len(instances)
+        P = len(grid[0]) if I else 0
+        engine = resolve_engine(self.engine, fanout=I * P)
+        graphs = [self.prepared(inst, ps[0].T)
+                  for inst, ps in zip(instances, grid)]
+        cells = schedule_portfolio_grid(
+            instances, grid, self.platform, variants=names, k=self.k,
+            mu=self.ls.mu, validate=self.validate, engine=engine,
+            graphs=graphs, commit_k=self.ls.commit_k,
+            ls_max_rounds=self.ls.max_rounds)
+        costs = np.array(
+            [[[cells[i][p][n].cost for n in names] for p in range(P)]
+             for i in range(I)],
+            dtype=np.int64).reshape(I, P, len(names))
+        return PlanResult(variants=names, results=cells, costs=costs,
+                          engine=engine,
+                          seconds=time.perf_counter() - t0,
+                          robust_requested=bool(request.robust))
+
+    def session(self, instances, window_profiles, **kw):
+        """An async rolling-horizon :class:`~repro.api.session
+        .PlanningSession` over this planner; see its docstring."""
+        from repro.api.session import PlanningSession
+
+        return PlanningSession(self, instances, window_profiles, **kw)

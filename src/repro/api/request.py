@@ -1,0 +1,177 @@
+"""Typed request surface of the Planner API.
+
+One :class:`PlanRequest` describes every scheduling scenario the repo
+serves: a single variant of a single instance, the full 17-variant
+portfolio, a forecast ensemble, or a whole instance suite against a
+profile grid. The request normalizes all accepted input spellings to the
+dense (instances x profiles x variants) grid that
+:func:`repro.core.portfolio.schedule_portfolio_grid` evaluates in one
+pass.
+
+Profile windowing helpers live here too: :func:`crop_profile` restricts a
+long forecast to a deadline window (``PlanRequest.deadline_scale``), and
+:func:`window_profile` slices the ``[t0, t0+T)`` window out of a long
+forecast — the rolling-horizon overlay the async
+:class:`~repro.api.session.PlanningSession` replans against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.carbon import PowerProfile
+from repro.core.cawosched import VARIANTS_BY_NAME, deadline_from_asap
+from repro.core.dag import Instance
+from repro.core.portfolio import PORTFOLIO_VARIANTS
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSearchConfig:
+    """Local-search knobs threaded from the Planner into every engine.
+
+    ``mu`` is the paper's +-mu shift radius; ``max_rounds`` bounds the
+    gain/commit rounds per hill climb; ``commit_k`` is the device climb's
+    commit width — how many proposals a row commits per device round (the
+    rest wait a round). Any ``commit_k`` yields the same termination
+    guarantee (the sequential-reference polish runs regardless), but a
+    profile-tuned width can cut round counts on dense-gain instances.
+    """
+
+    mu: int = 10
+    max_rounds: int = 200
+    commit_k: int = 32
+
+    def __post_init__(self):
+        if self.mu < 1 or self.max_rounds < 1 or self.commit_k < 1:
+            raise ValueError("mu, max_rounds, commit_k must be >= 1")
+
+
+def crop_profile(profile: PowerProfile, T: int) -> PowerProfile:
+    """Restrict a profile to the deadline window ``[0, T)``.
+
+    The forecast must cover the window (``profile.T >= T``); interval
+    structure and budgets inside the window are preserved exactly.
+    """
+    T = int(T)
+    if profile.T == T:
+        return profile
+    if profile.T < T:
+        raise ValueError(
+            f"profile horizon {profile.T} is shorter than deadline {T}")
+    keep = profile.bounds < T
+    bounds = np.append(profile.bounds[keep], T)
+    return PowerProfile(bounds=bounds.astype(np.int64),
+                        budget=profile.budget[:len(bounds) - 1].copy(),
+                        scenario=profile.scenario)
+
+
+def window_profile(profile: PowerProfile, t0: int, T: int) -> PowerProfile:
+    """Slice the ``[t0, t0+T)`` window of a long forecast.
+
+    Returns a T-horizon profile whose unit budget equals the forecast's on
+    the window (``out.unit_budget(x) == profile.unit_budget(x)[t0:t0+T]``
+    for every idle draw x) — the rolling-horizon overlay a
+    :class:`~repro.api.session.PlanningSession` replans each execution
+    window against.
+    """
+    t0, T = int(t0), int(T)
+    if t0 < 0 or T < 1:
+        raise ValueError("need t0 >= 0 and T >= 1")
+    if t0 + T > profile.T:
+        raise ValueError(
+            f"window [{t0}, {t0 + T}) exceeds forecast horizon {profile.T}")
+    b = profile.bounds
+    j0 = int(np.searchsorted(b, t0, side="right")) - 1
+    j1 = int(np.searchsorted(b, t0 + T, side="left"))
+    bounds = np.clip(b[j0:j1 + 1] - t0, 0, T).astype(np.int64)
+    return PowerProfile(bounds=bounds, budget=profile.budget[j0:j1].copy(),
+                        scenario=profile.scenario)
+
+
+def _as_instances(instances) -> list[Instance]:
+    if isinstance(instances, Instance):
+        return [instances]
+    out = list(instances)
+    if not all(isinstance(i, Instance) for i in out):
+        raise TypeError("instances must be Instance objects")
+    return out
+
+
+def _as_grid(profiles, I: int) -> list[list[PowerProfile]]:
+    """Normalize to one profile list per instance (shared list broadcast)."""
+    if isinstance(profiles, PowerProfile):
+        return [[profiles] for _ in range(I)]
+    rows = list(profiles)
+    if not rows:
+        raise ValueError("at least one profile is required")
+    if isinstance(rows[0], PowerProfile):
+        if not all(isinstance(p, PowerProfile) for p in rows):
+            raise TypeError("mixed profile spellings in one request")
+        return [list(rows) for _ in range(I)]
+    grid = [list(ps) for ps in rows]
+    if len(grid) != I:
+        raise ValueError(
+            f"per-instance profiles: got {len(grid)} lists for {I} "
+            f"instances")
+    return grid
+
+
+@dataclasses.dataclass
+class PlanRequest:
+    """One request over the (instances x profiles x variants) grid.
+
+    Accepted spellings (all normalize to the dense grid):
+
+    * ``instances`` — one :class:`Instance` or a sequence of them.
+    * ``profiles`` — one :class:`PowerProfile`, a sequence shared by every
+      instance, or a per-instance sequence of sequences (every instance
+      the same count P; an instance's profiles share its horizon).
+    * ``variants`` — ``None`` (asap + all 16 paper variants), one name, or
+      a sequence of names.
+    * ``deadline_scale`` — optional: crop every profile to the owning
+      instance's deadline ``deadline_scale x ASAP-makespan``
+      (:func:`crop_profile`); lets one long grid forecast serve instances
+      with different deadlines.
+    * ``robust`` — plan for the min-max pick across the profile axis
+      (:meth:`PlanResult.pick` then returns the robust variant's nominal
+      schedule instead of the nominal-best one).
+    """
+
+    instances: object
+    profiles: object
+    variants: object = None
+    deadline_scale: float | None = None
+    robust: bool = False
+
+    def resolve(self) -> tuple[list[Instance], list[list[PowerProfile]],
+                               tuple[str, ...]]:
+        """The normalized (instances, profile grid, variant names) triple."""
+        instances = _as_instances(self.instances)
+        if not instances:
+            raise ValueError("at least one instance is required")
+        grid = _as_grid(self.profiles, len(instances))
+        P = len(grid[0])
+        if any(len(ps) != P for ps in grid):
+            raise ValueError("every instance needs the same number of "
+                             "profiles (dense grid)")
+        if self.deadline_scale is not None:
+            grid = [[crop_profile(p, deadline_from_asap(
+                        inst, self.deadline_scale)) for p in ps]
+                    for inst, ps in zip(instances, grid)]
+        for inst, ps in zip(instances, grid):
+            if any(p.T != ps[0].T for p in ps):
+                raise ValueError(
+                    "an instance's profiles must share one horizon")
+        if self.variants is None:
+            names = tuple(PORTFOLIO_VARIANTS)
+        elif isinstance(self.variants, str):
+            names = (self.variants,)
+        else:
+            names = tuple(self.variants)
+        for n in names:
+            if n != "asap" and n not in VARIANTS_BY_NAME:
+                raise ValueError(f"unknown variant {n!r}")
+        if not names:
+            raise ValueError("at least one variant is required")
+        return instances, grid, names

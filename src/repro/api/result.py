@@ -1,0 +1,95 @@
+"""Dense result surface of the Planner API.
+
+One :class:`PlanResult` replaces the three incompatible legacy shapes
+(``ScheduleResult``, ``{variant: ScheduleResult}``, and a list of such
+dicts): a dense integer cost tensor indexed ``[instance, profile,
+variant]`` plus the per-cell schedules and timings, with accessors for
+the common reads (nominal best, robust min-max pick, a printable table).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cawosched import ScheduleResult
+from repro.core.portfolio import heuristic_indices, robust_pick
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """The (instances x profiles x variants) planning grid, densely.
+
+    ``costs[i, p, v]`` is the carbon cost of scheduling instance i against
+    profile p under variant ``variants[v]``; ``results[i][p]`` maps each
+    variant name to its full :class:`ScheduleResult` (start times, cost,
+    seconds). ``engine`` records the backend that actually ran (after
+    ``"auto"`` resolution); ``seconds`` is the wall clock of the whole
+    plan call.
+    """
+
+    variants: tuple[str, ...]
+    results: list                       # I x P of {variant: ScheduleResult}
+    costs: np.ndarray                   # int64 [I, P, V]
+    engine: str
+    seconds: float
+    robust_requested: bool = False
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        """(instances, profiles, variants)."""
+        return tuple(self.costs.shape)
+
+    def result(self, instance: int = 0, profile: int = 0,
+               variant: str | None = None) -> ScheduleResult:
+        """One cell's :class:`ScheduleResult` (default: the cell's best)."""
+        if variant is None:
+            return self.best(instance, profile)
+        return self.results[instance][profile][variant]
+
+    def starts(self, instance: int = 0, profile: int = 0) -> dict:
+        """``{variant: start times}`` of one (instance, profile) cell."""
+        return {n: r.start for n, r in self.results[instance][profile]
+                .items()}
+
+    def cost_matrix(self, instance: int = 0
+                    ) -> tuple[np.ndarray, tuple[str, ...]]:
+        """One instance's [P, V] ensemble x variant cost matrix + names
+        (the shape :func:`repro.core.portfolio.robust_pick` consumes)."""
+        return self.costs[instance], self.variants
+
+    def best(self, instance: int = 0, profile: int = 0) -> ScheduleResult:
+        """The cheapest heuristic variant of one (instance, profile) cell
+        (``asap`` competes only when it is the sole variant)."""
+        heur = heuristic_indices(self.variants)
+        row = self.costs[instance, profile, heur]
+        name = self.variants[heur[int(np.argmin(row))]]
+        return self.results[instance][profile][name]
+
+    def robust(self, instance: int = 0) -> tuple[str, int]:
+        """The min-max variant across the instance's profile axis:
+        ``(variant, worst_cost)`` minimizing the worst ensemble cost."""
+        return robust_pick(self.costs[instance], self.variants)
+
+    def pick(self, instance: int = 0) -> ScheduleResult:
+        """The schedule to execute, under the request's planning mode:
+        the robust variant's nominal-profile schedule when the request
+        asked for ``robust=True``, else the nominal-profile best."""
+        if self.robust_requested:
+            name, _ = self.robust(instance)
+            return self.results[instance][0][name]
+        return self.best(instance, 0)
+
+    def table(self, instance: int = 0) -> str:
+        """Printable per-variant summary of one instance: nominal cost,
+        worst ensemble cost, and mean planning seconds per profile."""
+        lines = [f"{'variant':<12} {'nominal':>10} {'worst':>10} "
+                 f"{'ms':>8}"]
+        P = self.costs.shape[1]
+        for v, name in enumerate(self.variants):
+            col = self.costs[instance, :, v]
+            secs = sum(self.results[instance][p][name].seconds
+                       for p in range(P)) / max(P, 1)
+            lines.append(f"{name:<12} {int(col[0]):>10} "
+                         f"{int(col.max()):>10} {secs * 1e3:>8.1f}")
+        return "\n".join(lines)

@@ -6,6 +6,7 @@ from repro.core.cawosched import (  # noqa: F401
     Variant,
     deadline_from_asap,
     schedule,
+    schedule_reference,
 )
 from repro.core.carbon import (  # noqa: F401
     PowerProfile,
@@ -29,5 +30,6 @@ from repro.core.portfolio import (  # noqa: F401
     prepare_instance,
     robust_pick,
     schedule_portfolio,
+    schedule_portfolio_grid,
     schedule_portfolio_multi,
 )

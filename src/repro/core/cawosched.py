@@ -55,7 +55,33 @@ class ScheduleResult:
 def schedule(inst: Instance, profile: PowerProfile, platform: Platform,
              variant: str = "pressWR-LS", k: int = 3, mu: int = 10,
              validate: bool = True) -> ScheduleResult:
-    """Run one algorithm variant (or ``asap``) on an instance."""
+    """Run one algorithm variant (or ``asap``) on an instance.
+
+    .. deprecated:: legacy shim over :class:`repro.api.Planner` (the
+       1 x 1 x 1 request shape); prefer ``Planner(platform)
+       .plan(PlanRequest(...))``. The sequential per-variant reference it
+       used to implement lives on as :func:`schedule_reference` (the
+       equivalence oracle of the engine tests).
+    """
+    from repro.api import LocalSearchConfig, Planner, PlanRequest
+
+    res = Planner(platform, engine="numpy", k=k,
+                  ls=LocalSearchConfig(mu=mu), validate=validate).plan(
+        PlanRequest(instances=inst, profiles=profile, variants=(variant,)))
+    return res.results[0][0][variant]
+
+
+def schedule_reference(inst: Instance, profile: PowerProfile,
+                       platform: Platform, variant: str = "pressWR-LS",
+                       k: int = 3, mu: int = 10,
+                       validate: bool = True) -> ScheduleResult:
+    """The paper's sequential per-variant pipeline, verbatim.
+
+    Kept as an independent oracle: no shared precompute, no segment lists,
+    no device fan-out — the per-unit greedy plus the sequential local
+    search exactly as §5 states them. The Planner/portfolio engines are
+    property-tested bit-identical to this.
+    """
     t0 = time.perf_counter()
     if variant == "asap":
         start = asap_schedule(inst)

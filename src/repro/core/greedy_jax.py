@@ -139,6 +139,8 @@ def _impl():
         "multi": jax.jit(multi, donate_argnums=don),
         "batch": jax.jit(jax.vmap(fanout, in_axes=(0,) * 8),
                          donate_argnums=don),
+        "grid": jax.jit(jax.vmap(multi, in_axes=(0,) * 8),
+                        donate_argnums=don),
     }
 
 
@@ -241,6 +243,25 @@ def greedy_fanout_jax(inst: Instance, profile: PowerProfile, est0, lst0,
         jnp.asarray(pad_masks(masks, Tp)), est_j, lst_j,
         jnp.asarray(pad_orders(orders, tail)))
     return starts[:, :inst.num_tasks]
+
+
+def greedy_fanout_grid_jax(bucket_rows):
+    """All (instance, profile, variant) greedy schedules of one shape bucket
+    in ONE launch — the third vmap level (instances) over ``multi``.
+
+    Args:
+      bucket_rows: per-instance tuples of bucket-padded device inputs in
+        ``greedy_scan`` argument order ``(dur, work, lp, rem0 [P, Tp],
+        mask0 [P, V, Tp+1], est0, lst0, order [V, Np])``; every row must
+        already be padded to the same :func:`pad_dims` bucket (same P, V).
+    Returns:
+      int32 [I, P, V, Np] start times (caller slices off the task padding).
+    """
+    import jax.numpy as jnp
+
+    stacked = tuple(jnp.stack([jnp.asarray(r[a]) for r in bucket_rows])
+                    for a in range(8))
+    return _impl()["grid"](*stacked)
 
 
 def greedy_fanout_multi_jax(inst: Instance, T: int, unit_budgets: np.ndarray,

@@ -36,7 +36,8 @@ from repro.core.local_search import apply_move, dyn_bounds, \
 from repro.core.local_search import dyn_bounds_all as _dyn_windows
 from repro.kernels.ops import ls_gains
 
-_COMMIT_K = 32       # device commits per row per round (rest wait a round)
+_COMMIT_K = 32       # default device commits per row per round
+# (the rest wait a round; expose per call as LocalSearchConfig.commit_k)
 
 
 def _commit_round(inst, T, rem, start, gains, mu) -> bool:
@@ -98,7 +99,7 @@ def local_search_batched(inst: Instance, profile: PowerProfile,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=8)
-def _climb_impl(mu: int, max_rounds: int):
+def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -167,7 +168,7 @@ def _climb_impl(mu: int, max_rounds: int):
             best_delta = jnp.argmax(g, axis=1).astype(jnp.int32) - mu
             best_gain = g.max(axis=1)
             order = jnp.argsort(-best_gain).astype(jnp.int32)
-            k = min(_COMMIT_K, order.shape[0])
+            k = min(commit_k, order.shape[0])
             carry = (rem, start, jnp.bool_(False), best_delta, best_gain)
             carry, _ = lax.scan(commit_step, carry, order[:k])
             return (carry[0], carry[1], rounds + 1, carry[2])
@@ -206,7 +207,8 @@ def local_search_portfolio_multi(inst: Instance, T: int,
                                  max_rounds: int = 200,
                                  interpret: bool | None = None,
                                  ctx: dict | None = None,
-                                 polish: bool = True) -> np.ndarray:
+                                 polish: bool = True,
+                                 commit_k: int | None = None) -> np.ndarray:
     """Hill-climb a batch of schedule rows of one instance at once.
 
     The portfolio engine's climber: rows are any mix of ``-LS`` variants
@@ -222,6 +224,11 @@ def local_search_portfolio_multi(inst: Instance, T: int,
         jnp prefix-sum twin); kept for climber-signature compatibility.
       ctx:          optional shared graph context (``ls_graph_context``;
         extra keys such as ``unit_budget`` are ignored).
+      commit_k:     device commits per row per round (None = the module
+        default ``_COMMIT_K``); any value yields the same termination
+        guarantee — the sequential-reference polish runs regardless — but
+        a profile-tuned K can cut device round counts on dense-gain
+        instances.
     Returns:
       int64 [R, N] improved schedules; per-row cost is monotonically
       non-increasing, and no row terminates while a sequential reference
@@ -261,7 +268,8 @@ def local_search_portfolio_multi(inst: Instance, T: int,
     succ_p = np.zeros((Np, Np), dtype=bool)
     succ_p[:N, :N] = succ
 
-    climbed = np.asarray(_climb_impl(mu, max_rounds)(
+    climbed = np.asarray(_climb_impl(
+        mu, max_rounds, _COMMIT_K if commit_k is None else int(commit_k))(
         jnp.asarray(rem_p), jnp.asarray(start_p), jnp.int32(T),
         jnp.asarray(dur_p), jnp.asarray(work_p), jnp.asarray(pred_p),
         jnp.asarray(succ_p)))
@@ -285,7 +293,8 @@ def local_search_portfolio(inst: Instance, profile: PowerProfile,
                            max_rounds: int = 200,
                            interpret: bool | None = None,
                            ctx: dict | None = None,
-                           polish: bool = True) -> np.ndarray:
+                           polish: bool = True,
+                           commit_k: int | None = None) -> np.ndarray:
     """Hill-climb a whole portfolio of schedules of one instance at once.
 
     Args:
@@ -304,4 +313,4 @@ def local_search_portfolio(inst: Instance, profile: PowerProfile,
     budgets = np.broadcast_to(unit, (V, profile.T))
     return local_search_portfolio_multi(
         inst, profile.T, budgets, starts, mu=mu, max_rounds=max_rounds,
-        interpret=interpret, ctx=ctx, polish=polish)
+        interpret=interpret, ctx=ctx, polish=polish, commit_k=commit_k)

@@ -23,31 +23,31 @@ along the profile axis, and this module's layering follows that split:
   overlay_profile(profile)`` is bit-identical to
   ``prepare_instance(inst, profile)`` by construction (and by test).
 
-Engines:
+Engines and entry points:
 
-* :func:`schedule_portfolio` — the numpy engine. Bit-identical to looping
-  ``schedule()`` over variants (tests assert equality): the 8 unique greedy
-  configurations run once each on the segment-list fast path and are shared
-  by their plain and ``-LS`` variants; each ``-LS`` variant then runs the
-  exact sequential local search with the shared context.
-* ``engine="jax"`` — device fan-out: one jitted vmapped ``lax.scan``
-  produces all greedy variants (:func:`repro.core.greedy_jax
-  .greedy_fanout_jax`, bit-identical to numpy), and all ``-LS`` hill climbs
-  advance on device together (:func:`repro.core.local_search_jax
-  .local_search_portfolio`: device-resident gain/commit rounds, then an
-  exact sequential polish, so ``-LS`` costs may differ from — never trail —
-  the batched reference's stopping point).
-* :func:`schedule_portfolio_multi` — the replanning engine: one instance
-  against N profiles (forecast ensemble members, rolling-horizon windows).
-  Prepares the graph once, overlays each profile, and under ``engine="jax"``
-  fans profiles x variants out as ONE device launch
-  (:func:`repro.core.greedy_jax.greedy_fanout_multi_jax`) plus one batched
-  hill climb over all (profile, ``-LS``-variant) rows. Per profile, results
-  are bit-identical to calling :func:`schedule_portfolio` with the same
-  engine on that profile alone.
-* :func:`portfolio_starts_batch` — shape-bucketed instance batching: the
-  scan core vmaps over instances whose padded shapes match, so one jitted
-  call schedules a whole bucket x all variants.
+* :func:`schedule_portfolio_grid` — THE scheduling pass: an I x P x V
+  (instances x profiles x variants) grid in one call, every request shape
+  of the public surface normalizes to it. ``engine="numpy"`` runs the 8
+  unique greedy configurations once per cell on the segment-list fast path
+  (bit-identical to looping ``schedule()`` over variants) and the exact
+  sequential local search for each ``-LS`` variant; ``engine="jax"``
+  launches the greedy fan-out ONCE per padded shape bucket — all
+  (instance, profile, variant) rows of a bucket ride one triple-vmapped
+  ``lax.scan`` — and advances each instance's (profile, ``-LS``-variant)
+  rows as one device-resident batched hill climb
+  (:func:`repro.core.local_search_jax.local_search_portfolio_multi`:
+  gain/commit rounds on device, then an exact sequential polish, so
+  ``-LS`` costs may differ from — never trail — the sequential
+  reference's stopping point).
+* :func:`schedule_portfolio` / :func:`schedule_portfolio_multi` — legacy
+  single-instance slices of the grid, kept as thin deprecation shims over
+  :class:`repro.api.Planner` (property-tested bit-identical per engine).
+* :func:`portfolio_starts_batch` — shape-bucketed instance batching of the
+  greedy starts alone (the second vmap level, no assembly).
+
+:class:`repro.api.Planner` is the typed facade over this module:
+``PlanRequest -> PlanResult`` with graph caching, ``engine="auto"``
+resolution, and the async rolling-horizon ``PlanningSession``.
 """
 from __future__ import annotations
 
@@ -90,26 +90,40 @@ class PreparedGraph:
     feasible: bool                    # est0 <= lst0 everywhere
     orders: dict                      # lazy (score, weighted) -> int64 [N]
     adj: tuple                        # (succ_lists, pred_lists)
-    ls_graph: dict                    # ls_graph_context() (no unit_budget)
+    _ls_graph: dict | None = None     # lazy ls_graph_context()
     _masks: dict = dataclasses.field(default_factory=dict)
     _lp: np.ndarray | None = None     # lazy longest-path matrix (jax path)
     _shared: tuple | None = None      # lazy padded device tensors
 
     _MASK_CACHE = 8                   # bounds keys kept (FIFO)
 
-    def masks_for(self, profile: PowerProfile) -> dict:
+    @property
+    def ls_graph(self) -> dict:
+        """ls_graph_context() (no unit_budget), computed on first use (a
+        request with no ``-LS`` variant never pays for it)."""
+        if self._ls_graph is None:
+            self._ls_graph = ls_graph_context(self.inst, self.platform)
+        return self._ls_graph
+
+    def masks_for(self, profile: PowerProfile,
+                  refined_values=(False, True)) -> dict:
         """refined -> bool [T+1] candidate masks; cached by interval bounds
         (an ensemble of budget perturbations over one grid computes them
-        once). The cache is bounded so a long-lived graph replanning over
-        rolling grids does not grow without limit."""
+        once), and only for the requested ``refined_values`` (a pinned
+        single-variant caller pays for one mask, not two). The cache is
+        bounded so a long-lived graph replanning over rolling grids does
+        not grow without limit."""
         key = profile.bounds.tobytes()
         if key not in self._masks:
             while len(self._masks) >= self._MASK_CACHE:
                 self._masks.pop(next(iter(self._masks)))
-            self._masks[key] = {
-                r: candidate_mask(self.inst, profile, refined=r, k=self.k)
-                for r in (False, True)}
-        return self._masks[key]
+            self._masks[key] = {}
+        masks = self._masks[key]
+        for r in refined_values:
+            if r not in masks:
+                masks[r] = candidate_mask(self.inst, profile, refined=r,
+                                          k=self.k)
+        return masks
 
     def order_for(self, score: str, weighted: bool) -> np.ndarray:
         """The (score, weighted) task order, computed on first use (a
@@ -146,7 +160,19 @@ class ProfileOverlay:
     masks: dict                       # refined -> bool [T+1] candidate mask
     segs: dict                        # refined -> (pts0, vals0) segment state
     unit_budget: np.ndarray           # int64 [T] effective per-unit budget
-    ls: dict                          # completed ls_context()
+    graph: PreparedGraph | None = None
+    _ls: dict | None = None           # lazy completed ls_context()
+
+    @property
+    def ls(self) -> dict:
+        """Completed ls_context(): the graph context + this profile's
+        budget timeline, built on first use (non-``-LS`` requests skip
+        the graph-context precompute entirely)."""
+        if self._ls is None:
+            ls = dict(self.graph.ls_graph)
+            ls["unit_budget"] = self.unit_budget
+            self._ls = ls
+        return self._ls
 
 
 def prepare_graph(inst: Instance, platform: Platform, T: int,
@@ -158,23 +184,26 @@ def prepare_graph(inst: Instance, platform: Platform, T: int,
     return PreparedGraph(
         inst=inst, platform=platform, T=T, k=k,
         est0=est0, lst0=lst0, feasible=feasible, orders={},
-        adj=adjacency_lists(inst), ls_graph=ls_graph_context(inst, platform))
+        adj=adjacency_lists(inst))
 
 
-def overlay_profile(graph: PreparedGraph,
-                    profile: PowerProfile) -> ProfileOverlay:
-    """Complete ``graph`` for one profile; see :class:`ProfileOverlay`."""
+def overlay_profile(graph: PreparedGraph, profile: PowerProfile,
+                    refined_values=(False, True)) -> ProfileOverlay:
+    """Complete ``graph`` for one profile; see :class:`ProfileOverlay`.
+
+    ``refined_values`` restricts the candidate-mask/segment precompute to
+    the interval subdivisions the caller's variants actually use (the
+    grid passes the needed set; an asap-only request skips both).
+    """
     if profile.T != graph.T:
         raise ValueError(
             f"profile horizon {profile.T} != prepared horizon {graph.T}")
-    masks = graph.masks_for(profile)
-    segs = {r: segment_state(graph.inst, profile, mask=mask)
-            for r, mask in masks.items()}
+    masks = graph.masks_for(profile, refined_values)
+    segs = {r: segment_state(graph.inst, profile, mask=masks[r])
+            for r in refined_values}
     unit_budget = profile.unit_budget(graph.inst.idle_total).astype(np.int64)
-    ls = dict(graph.ls_graph)
-    ls["unit_budget"] = unit_budget
     return ProfileOverlay(profile=profile, masks=masks, segs=segs,
-                          unit_budget=unit_budget, ls=ls)
+                          unit_budget=unit_budget, graph=graph)
 
 
 @dataclasses.dataclass
@@ -225,20 +254,6 @@ def _greedy_starts_numpy(prep: PreparedInstance, combos) -> dict:
     return out
 
 
-def _greedy_starts_jax(prep: PreparedInstance, combos) -> dict:
-    """All unique greedy configurations in one vmapped device call."""
-    from repro.core.greedy_jax import greedy_fanout_jax
-
-    t0 = time.perf_counter()
-    masks = np.stack([prep.masks[r] for (_, _, r) in combos])
-    orders = np.stack([prep.graph.order_for(s, w) for (s, w, _) in combos])
-    starts = np.asarray(greedy_fanout_jax(
-        prep.inst, prep.profile, prep.est0, prep.lst0, masks, orders,
-        shared=prep.graph.shared()), dtype=np.int64)
-    dt = (time.perf_counter() - t0) / max(len(combos), 1)
-    return {c: (starts[i], dt) for i, c in enumerate(combos)}
-
-
 def _needed_combos(names) -> list[tuple[str, bool, bool]]:
     need = []
     for name in names:
@@ -281,6 +296,145 @@ def _assemble(names, prep: PreparedInstance, greedy: dict, ls_done: dict,
     return out
 
 
+def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
+                            variants=None, k: int = 3, mu: int = 10,
+                            validate: bool = True, engine: str = "numpy",
+                            graphs=None, commit_k: int | None = None,
+                            ls_max_rounds: int = 200
+                            ) -> list[list[dict[str, ScheduleResult]]]:
+    """THE (instances x profiles x variants) scheduling pass.
+
+    Every request shape of the public surface — one variant of one
+    instance, the full 17-variant portfolio, a forecast ensemble, a whole
+    instance suite x ensemble grid — runs through this one function; the
+    legacy entry points and :meth:`repro.api.Planner.plan` are shims over
+    it. ``profile_grid[i]`` lists instance i's profiles; every instance
+    carries the same number P of profiles (the dense result grid), and an
+    instance's profiles share its horizon T (horizons may differ across
+    instances).
+
+    Returns an I x P nested list of ``{variant: ScheduleResult}`` dicts;
+    each cell is bit-identical to the historical single-cell
+    ``schedule_portfolio(instances[i], profile_grid[i][p], ...)`` on the
+    same engine (property-tested).
+
+    Engines: ``"numpy"`` runs the segment-list greedy + exact sequential
+    local search per cell. ``"jax"`` launches the greedy fan-out ONCE per
+    padded shape bucket (:func:`repro.core.greedy_jax.pad_dims`) — all
+    (instance, profile, variant) rows of a bucket ride one triple-vmapped
+    device call — and advances each instance's (profile, ``-LS``-variant)
+    rows as one batched device-resident hill climb (committing up to
+    ``commit_k`` proposals per row per round), polished to
+    sequential-reference local optimality.
+    """
+    if engine not in ("numpy", "jax"):
+        raise ValueError(f"unknown engine {engine!r}")
+    instances = list(instances)
+    I = len(instances)
+    if I == 0:
+        return []
+    profile_grid = [list(ps) for ps in profile_grid]
+    if len(profile_grid) != I:
+        raise ValueError("profile_grid must list one profile set "
+                         "per instance")
+    P = len(profile_grid[0])
+    if any(len(ps) != P for ps in profile_grid):
+        raise ValueError("every instance needs the same number of "
+                         "profiles (dense grid)")
+    if P == 0:
+        return [[] for _ in range(I)]
+    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
+    heur = any(n != "asap" for n in names)
+
+    if graphs is None:
+        graphs = [None] * I
+    graphs = [g if g is not None
+              else prepare_graph(inst, platform, ps[0].T, k=k)
+              for inst, ps, g in zip(instances, profile_grid, graphs)]
+    need = _needed_combos(names)
+    # overlays only precompute the interval subdivisions the requested
+    # variants use (an asap-only request skips masks/segments entirely)
+    rvals = tuple(sorted({r for (_, _, r) in need}))
+    overlays = [[overlay_profile(g, p, refined_values=rvals) for p in ps]
+                for g, ps in zip(graphs, profile_grid)]
+    if heur and not all(g.feasible for g in graphs):
+        raise ValueError("infeasible: deadline below ASAP makespan")
+
+    # --- greedy: all (instance, profile, unique-combo) starts -------------
+    greedys: list[list[dict]] = [[{} for _ in range(P)] for _ in range(I)]
+    if need and engine == "numpy":
+        for i in range(I):
+            for p in range(P):
+                prep = PreparedInstance(graph=graphs[i],
+                                        overlay=overlays[i][p])
+                greedys[i][p] = _greedy_starts_numpy(prep, need)
+    elif need:                                     # engine == "jax"
+        from repro.core.greedy_jax import greedy_fanout_grid_jax, \
+            pad_budget, pad_dims, pad_masks, pad_orders
+
+        buckets: dict[tuple, list[int]] = {}
+        for i, (inst, g) in enumerate(zip(instances, graphs)):
+            buckets.setdefault(pad_dims(inst.num_tasks, g.T), []).append(i)
+        for (_, Tp), idx in buckets.items():
+            t0 = time.perf_counter()
+            rows = []
+            for i in idx:
+                g = graphs[i]
+                dur, work, lp, est_j, lst_j, tail = g.shared()
+                budgets = pad_budget(np.stack(
+                    [ov.unit_budget for ov in overlays[i]]), Tp)
+                masks = pad_masks(np.stack(
+                    [np.stack([ov.masks[r] for (_, _, r) in need])
+                     for ov in overlays[i]]), Tp)
+                orders = pad_orders(np.stack(
+                    [g.order_for(s, w) for (s, w, _) in need]), tail)
+                rows.append((dur, work, lp, budgets, masks,
+                             est_j, lst_j, orders))
+            starts = np.asarray(greedy_fanout_grid_jax(rows),
+                                dtype=np.int64)
+            dt = (time.perf_counter() - t0) / (len(idx) * P * len(need))
+            for b, i in enumerate(idx):
+                N = instances[i].num_tasks
+                for p in range(P):
+                    greedys[i][p] = {c: (starts[b, p, ci, :N], dt)
+                                     for ci, c in enumerate(need)}
+
+    # --- local search: one batched climb per instance (jax), else exact
+    # sequential search inside _assemble (numpy) --------------------------
+    ls_names = [n for n in names
+                if n != "asap" and VARIANTS_BY_NAME[n].ls]
+    ls_dones: list[list[dict]] = [[{} for _ in range(P)] for _ in range(I)]
+    if ls_names and engine == "jax":
+        from repro.core.local_search_jax import local_search_portfolio_multi
+
+        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
+        for i in range(I):
+            t0 = time.perf_counter()
+            rows = np.stack(
+                [greedys[i][p][(v.score, v.weighted, v.refined)][0]
+                 for p in range(P) for v in keys])
+            row_budgets = np.stack([overlays[i][p].unit_budget
+                                    for p in range(P) for _ in keys])
+            # ctx = the graph dict, so the dense-adjacency cache of the
+            # device climb survives across profiles (the overlay's ls dict
+            # is a per-profile copy)
+            improved = local_search_portfolio_multi(
+                instances[i], graphs[i].T, row_budgets, rows, mu=mu,
+                max_rounds=ls_max_rounds, ctx=graphs[i].ls_graph,
+                commit_k=commit_k)
+            dt = (time.perf_counter() - t0) / len(rows)
+            for p in range(P):
+                ls_dones[i][p] = {n: (improved[p * len(keys) + j], dt)
+                                  for j, n in enumerate(ls_names)}
+
+    return [[_assemble(names,
+                       PreparedInstance(graph=graphs[i],
+                                        overlay=overlays[i][p]),
+                       greedys[i][p], ls_dones[i][p], mu, validate)
+             for p in range(P)]
+            for i in range(I)]
+
+
 def schedule_portfolio(inst: Instance, profile: PowerProfile,
                        platform: Platform, variants=None, k: int = 3,
                        mu: int = 10, validate: bool = True,
@@ -289,47 +443,22 @@ def schedule_portfolio(inst: Instance, profile: PowerProfile,
                        ) -> dict[str, ScheduleResult]:
     """Schedule all requested variants (default: asap + all 16) in one pass.
 
-    ``engine="numpy"`` is bit-identical to the per-variant ``schedule()``
-    loop; ``engine="jax"`` fans the greedy out on device and batches the
-    local-search rounds (monotone, polished to sequential-reference local
-    optimality, but ``-LS`` results may differ from the sequential
-    reference). ``prep`` may be passed to reuse the precompute across calls
-    (it must match ``(inst, profile, platform, k)``).
+    .. deprecated:: legacy shim over :class:`repro.api.Planner` (the 1
+       instance x 1 profile slice of one :meth:`~repro.api.Planner.plan`
+       call); prefer ``Planner(platform).plan(PlanRequest(...))``.
+       Bit-identical to the Planner per engine by construction (and by
+       test). ``prep`` may be passed to reuse the precompute across calls
+       (it must match ``(inst, profile, platform, k)``).
     """
-    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
-    if prep is None:
-        prep = prepare_instance(inst, profile, platform, k=k)
-    if not prep.feasible and any(n != "asap" for n in names):
-        raise ValueError("infeasible: deadline below ASAP makespan")
+    from repro.api import LocalSearchConfig, Planner, PlanRequest
 
-    need = _needed_combos(names)
-    if engine == "numpy":
-        greedy = _greedy_starts_numpy(prep, need)
-    elif engine == "jax":
-        greedy = _greedy_starts_jax(prep, need) if need else {}
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
-
-    ls_names = [n for n in names
-                if n != "asap" and VARIANTS_BY_NAME[n].ls]
-    ls_done: dict[str, tuple[np.ndarray, float]] = {}
-    if engine == "jax" and ls_names:
-        from repro.core.local_search_jax import local_search_portfolio_multi
-        t0 = time.perf_counter()
-        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
-        stack = np.stack([greedy[(v.score, v.weighted, v.refined)][0]
-                          for v in keys])
-        budgets = np.broadcast_to(prep.overlay.unit_budget,
-                                  (len(ls_names), profile.T))
-        # ctx = the graph dict, so the dense-adjacency cache of the device
-        # climb survives across profiles (the overlay's ls dict is a
-        # per-profile copy)
-        improved = local_search_portfolio_multi(
-            inst, profile.T, budgets, stack, mu=mu, ctx=prep.graph.ls_graph)
-        dt = (time.perf_counter() - t0) / len(ls_names)
-        ls_done = {n: (improved[i], dt) for i, n in enumerate(ls_names)}
-
-    return _assemble(names, prep, greedy, ls_done, mu, validate)
+    planner = Planner(platform, engine=engine, k=k,
+                      ls=LocalSearchConfig(mu=mu), validate=validate)
+    if prep is not None:
+        planner.seed_graph(prep.graph)
+    res = planner.plan(PlanRequest(instances=inst, profiles=profile,
+                                   variants=variants))
+    return res.results[0][0]
 
 
 def schedule_portfolio_multi(inst: Instance, profiles, platform: Platform,
@@ -339,72 +468,25 @@ def schedule_portfolio_multi(inst: Instance, profiles, platform: Platform,
                              ) -> list[dict[str, ScheduleResult]]:
     """One instance x N profiles x all variants; the replanning fan-out.
 
-    The profile-independent precompute runs once; each profile only pays
-    its overlay. Under ``engine="jax"`` ALL (profile, variant) greedy runs
-    are one device launch and all (profile, ``-LS``-variant) hill climbs
-    advance as one batched climb. Returns one ``{variant: ScheduleResult}``
-    dict per profile, each bit-identical to ``schedule_portfolio(inst,
-    profile_i, platform, engine=engine)``.
+    .. deprecated:: legacy shim over :class:`repro.api.Planner` (the 1
+       instance x P profiles slice of one :meth:`~repro.api.Planner.plan`
+       call); prefer ``Planner(platform).plan(PlanRequest(...))``.
+       Returns one ``{variant: ScheduleResult}`` dict per profile, each
+       bit-identical to ``schedule_portfolio(inst, profile_i, platform,
+       engine=engine)`` (property-tested).
     """
+    from repro.api import LocalSearchConfig, Planner, PlanRequest
+
     profiles = list(profiles)
     if not profiles:
         return []
-    names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
-    if graph is None:
-        graph = prepare_graph(inst, platform, profiles[0].T, k=k)
-    overlays = [overlay_profile(graph, p) for p in profiles]
-    preps = [PreparedInstance(graph=graph, overlay=ov) for ov in overlays]
-    if not graph.feasible and any(n != "asap" for n in names):
-        raise ValueError("infeasible: deadline below ASAP makespan")
-
-    if engine == "numpy":
-        return [schedule_portfolio(inst, p.profile, platform,
-                                   variants=names, k=k, mu=mu,
-                                   validate=validate, prep=p)
-                for p in preps]
-    if engine != "jax":
-        raise ValueError(f"unknown engine {engine!r}")
-
-    from repro.core.greedy_jax import greedy_fanout_multi_jax
-    from repro.core.local_search_jax import local_search_portfolio_multi
-
-    need = _needed_combos(names)
-    P = len(profiles)
-    greedys: list[dict] = [{} for _ in range(P)]
-    if need:
-        t0 = time.perf_counter()
-        budgets = np.stack([ov.unit_budget for ov in overlays])
-        masks = np.stack([np.stack([ov.masks[r] for (_, _, r) in need])
-                          for ov in overlays])
-        orders = np.stack([graph.order_for(s, w) for (s, w, _) in need])
-        starts = np.asarray(greedy_fanout_multi_jax(
-            inst, graph.T, budgets, masks, orders,
-            shared=graph.shared()), dtype=np.int64)
-        dt = (time.perf_counter() - t0) / (P * len(need))
-        for pi in range(P):
-            greedys[pi] = {c: (starts[pi, i], dt)
-                           for i, c in enumerate(need)}
-
-    ls_names = [n for n in names
-                if n != "asap" and VARIANTS_BY_NAME[n].ls]
-    ls_dones: list[dict] = [{} for _ in range(P)]
-    if ls_names:
-        t0 = time.perf_counter()
-        keys = [VARIANTS_BY_NAME[n] for n in ls_names]
-        rows = np.stack([greedys[pi][(v.score, v.weighted, v.refined)][0]
-                         for pi in range(P) for v in keys])
-        row_budgets = np.stack([overlays[pi].unit_budget
-                                for pi in range(P) for _ in keys])
-        improved = local_search_portfolio_multi(
-            inst, graph.T, row_budgets, rows, mu=mu, ctx=graph.ls_graph)
-        dt = (time.perf_counter() - t0) / len(rows)
-        for pi in range(P):
-            ls_dones[pi] = {n: (improved[pi * len(keys) + i], dt)
-                            for i, n in enumerate(ls_names)}
-
-    return [_assemble(names, preps[pi], greedys[pi], ls_dones[pi], mu,
-                      validate)
-            for pi in range(P)]
+    planner = Planner(platform, engine=engine, k=k,
+                      ls=LocalSearchConfig(mu=mu), validate=validate)
+    if graph is not None:
+        planner.seed_graph(graph)
+    res = planner.plan(PlanRequest(instances=inst, profiles=profiles,
+                                   variants=variants))
+    return res.results[0]
 
 
 def portfolio_cost_matrix(results, variants=None):
@@ -422,19 +504,26 @@ def portfolio_cost_matrix(results, variants=None):
     return costs, names
 
 
+def heuristic_indices(names) -> list[int]:
+    """Variant columns competing for best/robust picks: the heuristics,
+    unless ``asap`` is the sole variant requested (a caller pinned to the
+    baseline still gets a pick). THE convention — shared by
+    :func:`robust_pick` and :class:`repro.api.PlanResult`."""
+    heur = [i for i, n in enumerate(names) if n != "asap"]
+    return heur or list(range(len(names)))
+
+
 def robust_pick(costs: np.ndarray, names) -> tuple[str, int]:
     """The min-max variant of an ensemble cost matrix.
 
     Returns ``(variant, worst_cost)``: the heuristic variant whose worst
-    cost across the ensemble rows is smallest. The ``asap`` baseline only
-    competes when it is the sole variant requested (a gate pinned to the
-    baseline still gets a plan).
+    cost across the ensemble rows is smallest (competing columns per
+    :func:`heuristic_indices`).
     """
     names = tuple(names)
     if not names or not len(costs):
         raise ValueError("empty cost matrix")
-    heur = [i for i, n in enumerate(names) if n != "asap"] \
-        or list(range(len(names)))
+    heur = heuristic_indices(names)
     worst = np.asarray(costs)[:, heur].max(axis=0)
     j = int(worst.argmin())
     return names[heur[j]], int(worst[j])

@@ -9,11 +9,14 @@ from __future__ import annotations
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
-    """Resolve the tri-state ``interpret`` flag against the active backend."""
-    if interpret is None:
-        import jax
-        return jax.default_backend() == "cpu"
-    return bool(interpret)
+    """Resolve the tri-state ``interpret`` flag against the active backend.
+
+    A thin projection of :func:`resolve_mode` for kernels that only have a
+    compiled and an interpreted path (no jnp twin): every ``interpret=None``
+    decision in the tree routes through the same mode resolution, so no two
+    call sites can disagree on the active backend.
+    """
+    return resolve_mode(interpret) != "pallas"
 
 
 def resolve_mode(interpret: bool | None) -> str:
@@ -29,6 +32,24 @@ def resolve_mode(interpret: bool | None) -> str:
         import jax
         return "jnp" if jax.default_backend() == "cpu" else "pallas"
     return "interpret" if interpret else "pallas"
+
+
+def resolve_engine(engine: str | None, fanout: int = 1) -> str:
+    """Resolve a scheduling-engine request to ``"numpy"`` or ``"jax"``.
+
+    The single source of the ``engine="auto"`` rule shared by
+    :class:`repro.api.Planner` and :class:`repro.runtime.carbon_gate
+    .CarbonGate`: ``auto`` picks the device fan-out as soon as the request
+    actually fans out (``fanout`` = number of (instance, profile) cells
+    > 1 — replanning loops amortize the jit cache and the vmapped launch
+    pays off immediately), and the numpy engine for one-off single-cell
+    calls (where compile latency would dominate).
+    """
+    if engine in (None, "auto"):
+        return "jax" if fanout > 1 else "numpy"
+    if engine not in ("numpy", "jax"):
+        raise ValueError(f"unknown engine {engine!r}")
+    return engine
 
 
 def enable_compilation_cache(path: str | None = None) -> str | None:

@@ -22,11 +22,11 @@ import dataclasses
 
 import numpy as np
 
+from repro.api import Planner, PlanRequest
 from repro.cluster import Platform
-from repro.core.carbon import PowerProfile, schedule_cost
+from repro.core.carbon import PowerProfile
 from repro.core.dag import FixedMapping, Instance, build_instance
-from repro.core.portfolio import portfolio_cost_matrix, robust_pick, \
-    schedule_portfolio_multi
+from repro.kernels.backend import resolve_engine
 from repro.workflows.generators import Workflow
 
 
@@ -127,12 +127,16 @@ class CarbonGate:
         self.variant = variant
         self.profiles = [profile] + [p for p in (profiles or [])
                                      if p is not profile]
-        if engine == "auto":
-            # replanning loops amortize the jit cache; the device fan-out
-            # pays off as soon as there is an ensemble to score
-            engine = "jax" if len(self.profiles) > 1 else "numpy"
-        self.engine = engine
+        # engine="auto" centrally resolved: the device fan-out pays off as
+        # soon as there is an ensemble to score (replanning loops amortize
+        # the jit cache)
+        self.engine = resolve_engine(engine, fanout=len(self.profiles))
+        self.planner = Planner(platform, engine=self.engine)
         self.plan: GatePlan | None = None
+
+    def _variants(self):
+        return None if self.variant == "auto" \
+            else tuple(dict.fromkeys(("asap", self.variant)))
 
     def make_plan(self, chunk_seconds: list[list[int]],
                   barriers: list[int] | None = None) -> GatePlan:
@@ -140,14 +144,12 @@ class CarbonGate:
             [len(c) for c in chunk_seconds], chunk_seconds, barriers)
         inst = build_instance(wf, mapping, self.platform,
                               dur=wf.node_w)
-        variants = None if self.variant == "auto" \
-            else tuple(dict.fromkeys(("asap", self.variant)))
-        results = schedule_portfolio_multi(
-            inst, self.profiles, self.platform, variants=variants,
-            engine=self.engine)
-        costs, names = portfolio_cost_matrix(results)
-        chosen, worst_cost = robust_pick(costs, names)
-        nominal = results[0]
+        res = self.planner.plan(PlanRequest(
+            instances=inst, profiles=self.profiles,
+            variants=self._variants(), robust=True))
+        costs, names = res.cost_matrix(0)
+        chosen, worst_cost = res.robust(0)
+        nominal = res.results[0][0]
         self.plan = GatePlan(
             instance=inst, profile=self.profile,
             start=nominal[chosen].start, cost=nominal[chosen].cost,
@@ -155,6 +157,25 @@ class CarbonGate:
             robust_cost=worst_cost, cost_matrix=costs,
             variant_names=names)
         return self.plan
+
+    def replan_session(self, chunk_seconds: list[list[int]],
+                       window_profiles, n_windows: int | None = None,
+                       barriers: list[int] | None = None, lookahead: int = 1):
+        """Async rolling-horizon replanning of this gate's chunk workflow.
+
+        ``window_profiles`` is the per-window forecast source (callable
+        ``k -> profiles`` or a sequence); every window's forecast must
+        share one horizon so the chunk instance's PreparedGraph — and the
+        jit cache under ``engine="jax"`` — is reused across windows.
+        Returns a :class:`repro.api.PlanningSession` planning window k+1
+        while window k executes.
+        """
+        wf, mapping = chunk_workflow(
+            [len(c) for c in chunk_seconds], chunk_seconds, barriers)
+        inst = build_instance(wf, mapping, self.platform, dur=wf.node_w)
+        return self.planner.session(
+            inst, window_profiles, n_windows=n_windows,
+            variants=self._variants(), robust=True, lookahead=lookahead)
 
     def wait_time(self, pod: int, chunk: int, now: float) -> float:
         """Seconds to sleep before running this chunk (0 if already due)."""

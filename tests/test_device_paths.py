@@ -19,6 +19,7 @@ from repro.workflows import make_workflow
 from repro.workflows.dot_io import load_dot, save_dot
 
 
+@pytest.mark.device
 @pytest.mark.parametrize("seed,kind,scen,sc,wt,rf", [
     (3, "eager", "S3", "press", True, True),
     (1, "atacseq", "S1", "slack", False, False),

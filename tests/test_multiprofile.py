@@ -71,7 +71,8 @@ def test_overlay_rejects_horizon_mismatch():
         overlay_profile(graph, bad)
 
 
-@pytest.mark.parametrize("engine", ["numpy", "jax"])
+@pytest.mark.parametrize(
+    "engine", ["numpy", pytest.param("jax", marks=pytest.mark.device)])
 def test_multi_matches_per_profile_loop(engine):
     plat, inst, prof = _setup(samples=2, seed=1)
     profs = _ensemble(plat, prof.T, 4)
@@ -136,6 +137,7 @@ def test_longest_path_matrix_matches_worklist_relaxation():
         assert (est_inc[unplaced] == ref[unplaced]).all()
 
 
+@pytest.mark.device
 def test_gains_jnp_twin_matches_pallas_interpreter():
     from repro.kernels.ops import ls_gains, ls_gains_batched
 
@@ -164,6 +166,7 @@ def test_gains_jnp_twin_matches_pallas_interpreter():
     np.testing.assert_array_equal(a, b)
 
 
+@pytest.mark.device
 def test_portfolio_ls_no_earlier_termination_than_sequential():
     """Every -LS row of the batched climber ends at a state the sequential
     reference cannot improve: one extra reference round is a no-op."""
@@ -179,6 +182,7 @@ def test_portfolio_ls_no_earlier_termination_than_sequential():
         assert (polished == res[name].start).all(), name
 
 
+@pytest.mark.device
 def test_portfolio_ls_monotone_per_row():
     plat, inst, prof = _setup(samples=3, seed=4, factor=2.0, scenario="S1")
     from repro.core import schedule_cost, validate_schedule

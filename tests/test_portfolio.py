@@ -45,14 +45,20 @@ def _setup(kind="eager", samples=3, seed=3, factor=1.5, scenario="S3"):
 ])
 def test_portfolio_bit_identical_to_variant_loop(seed, kind, scenario,
                                                  factor):
+    from repro.core import schedule_reference
+
     plat, inst, prof = _setup(kind=kind, seed=seed, factor=factor,
                               scenario=scenario)
     port = schedule_portfolio(inst, prof, plat)
     assert set(port) == set(PORTFOLIO_VARIANTS)
     for name in PORTFOLIO_VARIANTS:
-        ref = schedule(inst, prof, plat, name)
+        # schedule_reference is the independent sequential oracle
+        # (schedule() itself is a Planner shim since the API redesign)
+        ref = schedule_reference(inst, prof, plat, name)
         assert (port[name].start == ref.start).all(), name
         assert port[name].cost == ref.cost, name
+        shim = schedule(inst, prof, plat, name)
+        assert (shim.start == ref.start).all(), name
 
 
 def test_portfolio_reuses_prepared_instance():
@@ -136,6 +142,7 @@ def test_endpoint_rule_on_overrunning_task():
     assert not (ref_start[v0] + inst.dur[v0] <= T)
 
 
+@pytest.mark.device
 def test_device_greedy_matches_numpy_at_tight_deadline():
     """Regression companion: the jax scan uses the numpy endpoint rule."""
     from repro.core.greedy_jax import greedy_schedule_jax
@@ -149,6 +156,7 @@ def test_device_greedy_matches_numpy_at_tight_deadline():
         assert (a == b.astype(np.int64)).all()
 
 
+@pytest.mark.device
 def test_jax_engine_greedy_rows_match_numpy():
     plat, inst, prof = _setup(samples=2, seed=1)
     pn = schedule_portfolio(inst, prof, plat, engine="numpy")
@@ -159,6 +167,7 @@ def test_jax_engine_greedy_rows_match_numpy():
         assert (pn[name].start == pj[name].start).all(), name
 
 
+@pytest.mark.device
 def test_instance_batched_fanout_matches_reference():
     """Two same-shape instances (same workflow/platform, different profile
     budgets) ride one doubly-vmapped call; every (instance, combo) row must
@@ -181,6 +190,7 @@ def test_instance_batched_fanout_matches_reference():
             assert (st[i] == ref).all(), (sc, wt, rf)
 
 
+@pytest.mark.device
 def test_jax_engine_asap_only_does_not_fan_out():
     """Regression: an empty greedy combo set (asap-only request) must not
     crash the jax engine's fan-out stacking."""
@@ -192,6 +202,7 @@ def test_jax_engine_asap_only_does_not_fan_out():
     assert (res["asap"].start == ref.start).all()
 
 
+@pytest.mark.device
 def test_batched_portfolio_local_search_monotone_and_valid():
     plat, inst, prof = _setup(samples=3, seed=4, factor=2.0, scenario="S1")
     combos = (("press", False, True), ("slack", True, False),
@@ -205,6 +216,7 @@ def test_batched_portfolio_local_search_monotone_and_valid():
         assert schedule_cost(inst, prof, improved[i]) <= base[i]
 
 
+@pytest.mark.device
 def test_gain_scan_batched_matches_rows():
     from repro.kernels.ops import ls_gains, ls_gains_batched
 
