@@ -7,7 +7,8 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-device test-host bench bench-smoke planner-smoke verify
+.PHONY: test test-device test-host test-exact bench bench-smoke \
+	planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,6 +20,10 @@ test-device:
 # everything but the device tests (quick CPU-only signal)
 test-host:
 	$(PY) -m pytest -x -q -m "not device"
+
+# the exact-solver stack (HiGHS ILP; self-skips where scipy.milp is absent)
+test-exact:
+	$(PY) -m pytest -x -q -m ilp
 
 bench:
 	$(PY) -m benchmarks.run --only portfolio

@@ -19,6 +19,7 @@ def main() -> None:
                          "roofline,portfolio")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes, <60s; refresh BENCH_portfolio.json "
+                         "(incl. its solver-quality `gaps` section) "
                          "cheaply in perf-touching PRs (tier-2: "
                          "`make bench-smoke`)")
     args = ap.parse_args()
@@ -44,7 +45,7 @@ def main() -> None:
         r4(sizes=sizes, clusters=clusters)
     if "ilp" in want:
         from benchmarks.fig_ilp import run as r5
-        r5()
+        r5(time_limit=20.0 if args.smoke else 90.0)
     if "runtime" in want:
         from benchmarks.fig_runtime import run as r6
         r6(sizes=(200, 1000, 4000) if args.full else (200, 1000))

@@ -11,6 +11,19 @@ covers every scheduling scenario — one variant, the 17-variant portfolio,
 forecast ensembles, whole instance suites — through one code path, and
 :class:`PlanningSession` adds async rolling-horizon replanning (plan
 window k+1 while window k executes).
+
+The ``solver=`` request axis picks the backend serving the grid
+(:mod:`repro.core.solvers`): the heuristic portfolio (default), the exact
+DP/ILP dispatch, or the asap baseline — so the paper's full
+heuristics-vs-baseline-vs-exact evaluation is three ``plan()`` calls:
+
+    heur = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    base = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                    solver="asap"))
+    opt = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="exact"))
+    heur.gap(opt)                                    # [I, P] ratios
+    print(heur.compare(opt))                         # quality table
 """
 from repro.api.planner import Planner  # noqa: F401
 from repro.api.request import (  # noqa: F401

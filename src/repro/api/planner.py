@@ -18,6 +18,14 @@ code path (:func:`repro.core.portfolio.schedule_portfolio_grid`):
 :func:`repro.kernels.backend.resolve_engine` — the same rule the kernels'
 ``interpret=None`` tri-state routes through, so the facade and the
 kernels can never disagree on the active backend.
+
+The wider ``solver=`` axis (:mod:`repro.core.solvers`, resolved by
+:func:`repro.kernels.backend.resolve_solver`) picks WHICH backend serves
+the grid: the heuristic portfolio above (default), the exact DP/ILP
+dispatch (``solver="exact"``), the raw ``"ilp"``/``"dp"`` oracles, or the
+``"asap"`` baseline — so one Planner runs the paper's full
+heuristics-vs-baseline-vs-exact evaluation in three ``plan()`` calls and
+:meth:`PlanResult.gap`/:meth:`PlanResult.compare` report the quality.
 """
 from __future__ import annotations
 
@@ -28,9 +36,8 @@ import numpy as np
 
 from repro.api.request import LocalSearchConfig, PlanRequest
 from repro.api.result import PlanResult
-from repro.core.portfolio import PreparedGraph, prepare_graph, \
-    schedule_portfolio_grid
-from repro.kernels.backend import resolve_engine
+from repro.core.portfolio import PreparedGraph, prepare_graph
+from repro.kernels.backend import resolve_engine, resolve_solver
 
 
 class Planner:
@@ -100,16 +107,24 @@ class Planner:
             raise TypeError("pass a PlanRequest or keywords, not both")
         t0 = time.perf_counter()
         instances, grid, names = request.resolve()
+        solver = resolve_solver(request.solver)
         I = len(instances)
         P = len(grid[0]) if I else 0
-        engine = resolve_engine(self.engine, fanout=I * P)
+        # engine= is the heuristic solver's sub-knob; exact solvers run
+        # on host scipy/numpy regardless, and only graph-consuming
+        # solvers pay for (and cache) the PreparedGraph precompute
+        engine = resolve_engine(self.engine, fanout=I * P) \
+            if solver.name == "heuristic" else "numpy"
         graphs = [self.prepared(inst, ps[0].T)
-                  for inst, ps in zip(instances, grid)]
-        cells = schedule_portfolio_grid(
-            instances, grid, self.platform, variants=names, k=self.k,
+                  for inst, ps in zip(instances, grid)] \
+            if solver.uses_graphs else None
+        out = solver.solve_grid(
+            instances, grid, self.platform, names, k=self.k,
             mu=self.ls.mu, validate=self.validate, engine=engine,
             graphs=graphs, commit_k=self.ls.commit_k,
-            ls_max_rounds=self.ls.max_rounds)
+            ls_max_rounds=self.ls.max_rounds,
+            options=request.solver_options)
+        cells = out.cells
         costs = np.array(
             [[[cells[i][p][n].cost for n in names] for p in range(P)]
              for i in range(I)],
@@ -117,7 +132,8 @@ class Planner:
         return PlanResult(variants=names, results=cells, costs=costs,
                           engine=engine,
                           seconds=time.perf_counter() - t0,
-                          robust_requested=bool(request.robust))
+                          robust_requested=bool(request.robust),
+                          solver=solver.name, lower_bound=out.lower)
 
     def session(self, instances, window_profiles, **kw):
         """An async rolling-horizon :class:`~repro.api.session

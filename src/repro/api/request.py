@@ -23,7 +23,6 @@ import numpy as np
 from repro.core.carbon import PowerProfile
 from repro.core.cawosched import VARIANTS_BY_NAME, deadline_from_asap
 from repro.core.dag import Instance
-from repro.core.portfolio import PORTFOLIO_VARIANTS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,16 +34,22 @@ class LocalSearchConfig:
     commit width — how many proposals a row commits per device round (the
     rest wait a round). Any ``commit_k`` yields the same termination
     guarantee (the sequential-reference polish runs regardless), but a
-    profile-tuned width can cut round counts on dense-gain instances.
+    profile-tuned width can cut round counts on dense-gain instances;
+    ``commit_k="auto"`` picks the width per instance from its gain
+    density (:func:`repro.core.local_search_jax.auto_commit_k`, scaled
+    with the candidate-segment count).
     """
 
     mu: int = 10
     max_rounds: int = 200
-    commit_k: int = 32
+    commit_k: int | str = 32
 
     def __post_init__(self):
-        if self.mu < 1 or self.max_rounds < 1 or self.commit_k < 1:
-            raise ValueError("mu, max_rounds, commit_k must be >= 1")
+        if self.mu < 1 or self.max_rounds < 1:
+            raise ValueError("mu, max_rounds must be >= 1")
+        if self.commit_k != "auto" and (
+                not isinstance(self.commit_k, int) or self.commit_k < 1):
+            raise ValueError("commit_k must be an int >= 1 or 'auto'")
 
 
 def crop_profile(profile: PowerProfile, T: int) -> PowerProfile:
@@ -136,6 +141,15 @@ class PlanRequest:
     * ``robust`` — plan for the min-max pick across the profile axis
       (:meth:`PlanResult.pick` then returns the robust variant's nominal
       schedule instead of the nominal-best one).
+    * ``solver`` — which registered backend serves the grid
+      (:mod:`repro.core.solvers`): ``"heuristic"`` (default, the
+      portfolio engine; the only solver with a variant axis), ``"exact"``
+      (§4.1 DP on uniprocessor chains, time-indexed ILP otherwise),
+      ``"ilp"``, ``"dp"``, or ``"asap"``. Non-heuristic solvers serve one
+      variant column named after the solver.
+    * ``solver_options`` — solver-specific knobs: ``time_limit`` /
+      ``mip_gap`` (ilp, exact), ``check`` (dp: cross-validate against the
+      pseudo-polynomial oracle).
     """
 
     instances: object
@@ -143,6 +157,8 @@ class PlanRequest:
     variants: object = None
     deadline_scale: float | None = None
     robust: bool = False
+    solver: str = "heuristic"
+    solver_options: dict | None = None
 
     def resolve(self) -> tuple[list[Instance], list[list[PowerProfile]],
                                tuple[str, ...]]:
@@ -163,15 +179,24 @@ class PlanRequest:
             if any(p.T != ps[0].T for p in ps):
                 raise ValueError(
                     "an instance's profiles must share one horizon")
+        from repro.kernels.backend import resolve_solver
+
+        solver = resolve_solver(self.solver)    # raises on unknown solvers
         if self.variants is None:
-            names = tuple(PORTFOLIO_VARIANTS)
+            names = solver.default_variants()
         elif isinstance(self.variants, str):
             names = (self.variants,)
         else:
             names = tuple(self.variants)
-        for n in names:
-            if n != "asap" and n not in VARIANTS_BY_NAME:
-                raise ValueError(f"unknown variant {n!r}")
         if not names:
             raise ValueError("at least one variant is required")
+        if solver.name == "heuristic":
+            for n in names:
+                if n != "asap" and n not in VARIANTS_BY_NAME:
+                    raise ValueError(f"unknown variant {n!r}")
+        elif names != solver.default_variants():
+            raise ValueError(
+                f"solver {solver.name!r} serves exactly the variant "
+                f"column {solver.default_variants()}; drop variants= "
+                f"(got {names!r})")
         return instances, grid, names

@@ -26,6 +26,12 @@ class PlanResult:
     seconds). ``engine`` records the backend that actually ran (after
     ``"auto"`` resolution); ``seconds`` is the wall clock of the whole
     plan call.
+
+    ``solver`` is the registered backend that produced the grid
+    (:mod:`repro.core.solvers`); exact solvers fill ``lower_bound`` with
+    a valid per-cell bound on the optimal cost (``lower_bound == cost``
+    certifies a proven optimum), which :meth:`gap` and :meth:`compare`
+    consume to report heuristic-vs-optimal quality.
     """
 
     variants: tuple[str, ...]
@@ -34,6 +40,8 @@ class PlanResult:
     engine: str
     seconds: float
     robust_requested: bool = False
+    solver: str = "heuristic"
+    lower_bound: np.ndarray | None = None   # int64 [I, P] (exact solvers)
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -79,6 +87,66 @@ class PlanResult:
             name, _ = self.robust(instance)
             return self.results[instance][0][name]
         return self.best(instance, 0)
+
+    def best_costs(self) -> np.ndarray:
+        """Per-cell best competing cost, int64 [I, P] (the min across the
+        columns :func:`repro.core.portfolio.heuristic_indices` admits)."""
+        heur = heuristic_indices(self.variants)
+        return self.costs[:, :, heur].min(axis=2)
+
+    def gap(self, exact: "PlanResult | None" = None) -> np.ndarray:
+        """Optimality-gap ratios, float [I, P]: per-cell best cost over
+        the optimal-cost lower bound (1.0 = provably optimal).
+
+        The bound comes from ``exact`` — a second :class:`PlanResult` of
+        the same (instances x profiles) grid planned with an exact solver
+        (``plan(request, solver="exact")``) — or, when ``exact`` is
+        omitted, from this result's own ``lower_bound`` (set when this
+        result itself came from an exact solver). Cells with a zero bound
+        follow the paper's convention: 1.0 when the best cost is also
+        zero, ``inf`` otherwise.
+        """
+        if exact is not None:
+            if exact.costs.shape[:2] != self.costs.shape[:2]:
+                raise ValueError(
+                    f"grid shapes differ: {self.costs.shape[:2]} vs "
+                    f"{exact.costs.shape[:2]}")
+            lb = exact.lower_bound if exact.lower_bound is not None \
+                else exact.best_costs()
+        else:
+            lb = self.lower_bound
+        if lb is None:
+            raise ValueError(
+                "no lower bound available: pass an exact PlanResult "
+                "(e.g. plan(..., solver='exact')) to gap()")
+        best = self.best_costs().astype(np.float64)
+        lb = np.asarray(lb, dtype=np.float64)
+        out = np.where(best <= 0, 1.0, np.inf)
+        pos = lb > 0
+        out[pos] = best[pos] / lb[pos]
+        return out
+
+    def compare(self, other: "PlanResult", instance: int = 0,
+                profile: int = 0) -> str:
+        """Printable quality table of one cell: every variant of this
+        result against ``other``'s best cost in the same cell (typically
+        an exact plan — the paper's heuristics-vs-baseline-vs-exact
+        evaluation in one string). Ratios follow :meth:`gap`'s zero-cost
+        conventions; a trailing line reports whether ``other``'s bound
+        certifies optimality for the cell.
+        """
+        ref = int(other.best_costs()[instance, profile])
+        lines = [f"{'variant':<12} {'cost':>10} {other.solver:>10} "
+                 f"{'ratio':>8}"]
+        for v, name in enumerate(self.variants):
+            c = int(self.costs[instance, profile, v])
+            r = c / ref if ref > 0 else (1.0 if c <= 0 else float("inf"))
+            lines.append(f"{name:<12} {c:>10} {ref:>10} {r:>8.3f}")
+        if other.lower_bound is not None:
+            lb = int(other.lower_bound[instance, profile])
+            lines.append(f"[{other.solver}] lower bound {lb} "
+                         f"({'proven optimal' if lb >= ref else 'gap open'})")
+        return "\n".join(lines)
 
     def table(self, instance: int = 0) -> str:
         """Printable per-variant summary of one instance: nominal cost,

@@ -33,3 +33,10 @@ from repro.core.portfolio import (  # noqa: F401
     schedule_portfolio_grid,
     schedule_portfolio_multi,
 )
+from repro.core.solvers import (  # noqa: F401
+    SolveOutput,
+    Solver,
+    get_solver,
+    register_solver,
+    solver_names,
+)

@@ -16,11 +16,27 @@ from repro.core.carbon import PowerProfile
 from repro.core.dag import Instance
 
 
-def _chain(inst: Instance) -> np.ndarray:
+def is_uniprocessor(inst: Instance) -> bool:
+    """True when the fixed mapping is one processor chain covering every
+    task AND all tasks share one work power — the §4.1 DP regime (the
+    DP's cost prefix assumes a single active draw; a one-processor
+    mapping gives uniform work by construction, the explicit check only
+    guards hand-built instances). The dispatch test of ``solver="exact"``
+    (:class:`repro.core.solvers.ExactSolver`): DP here, ILP otherwise."""
     chains = [c for c in inst.proc_chains if len(c)]
-    assert len(chains) == 1, "dp_uniproc requires a single processor chain"
-    assert len(chains[0]) == inst.num_tasks
-    return np.asarray(chains[0], dtype=np.int64)
+    if len(chains) != 1 or len(chains[0]) != inst.num_tasks:
+        return False
+    w = inst.task_work
+    return bool((w == w[0]).all()) if len(w) else True
+
+
+def _chain(inst: Instance) -> np.ndarray:
+    if not is_uniprocessor(inst):
+        raise ValueError("dp_uniproc requires a single processor chain "
+                         "covering every task with one shared work power "
+                         "(see is_uniprocessor)")
+    return np.asarray([c for c in inst.proc_chains if len(c)][0],
+                      dtype=np.int64)
 
 
 def _unit_task_cost(inst: Instance, profile: PowerProfile) -> np.ndarray:

@@ -40,7 +40,11 @@ def compute_lst(inst: Instance, T: int, start_fixed: np.ndarray | None = None,
 
 
 def asap_schedule(inst: Instance) -> np.ndarray:
-    """The ASAP baseline (paper §5.1): start every task at its EST."""
+    """The ASAP baseline (paper §5.1): start every task at its EST.
+
+    Served on the Planner's solver axis as ``PlanRequest(solver="asap")``
+    (:class:`repro.core.solvers.AsapSolver`, the regression floor of the
+    heuristics-vs-baseline-vs-exact evaluation)."""
     return compute_est(inst)
 
 

@@ -58,15 +58,42 @@ NEG_PATH = -(1 << 30)                  # "no path" marker in lp (int32-safe)
 N_BUCKET = 128                         # task-axis shape bucket
 T_BUCKET = 256                         # time-axis shape bucket
 
+# Device envelope for the dense longest-path matrix: the matrix is
+# O(N^2) int32 (64 MiB at N=4000), fine for the device path's
+# N ~ 10^2-10^3 regime but a silent multi-hundred-MiB allocation beyond
+# it. 128 MiB admits N ~ 5800; bigger instances must either use
+# engine="numpy" (no matrix) or wait for the blocked/sparse-reachability
+# form (ROADMAP: "Longest-path matrix memory").
+LP_MAX_BYTES = 128 * 2**20
 
-def longest_path_matrix(inst: Instance) -> np.ndarray:
+
+def lp_matrix_bytes(num_tasks: int) -> int:
+    """Bytes the dense int32 longest-path matrix of ``num_tasks`` needs."""
+    return 4 * int(num_tasks) * int(num_tasks)
+
+
+def longest_path_matrix(inst: Instance,
+                        max_bytes: int | None = None) -> np.ndarray:
     """``lp[u, t]`` = max over u->t paths of the path's duration sum
     (excluding ``dur[t]``); ``lp[v, v] = 0``; unreachable ~ ``NEG_PATH``.
 
     Profile-independent: one O(E*N) host sweep per instance serves every
-    profile, variant and replanning round of the device path.
+    profile, variant and replanning round of the device path. The byte
+    cost is checked up front against ``max_bytes`` (default
+    :data:`LP_MAX_BYTES`) so an oversized instance fails loudly instead
+    of silently allocating O(N^2) device memory.
     """
     N = inst.num_tasks
+    limit = LP_MAX_BYTES if max_bytes is None else int(max_bytes)
+    need = lp_matrix_bytes(N)
+    if need > limit:
+        raise MemoryError(
+            f"longest-path matrix needs {need / 2**20:.1f} MiB "
+            f"(N={N} tasks, O(N^2) int32), over the "
+            f"{limit / 2**20:.0f} MiB device envelope; use "
+            f"engine='numpy' for this instance or pass a larger "
+            f"max_bytes — the blocked / sparse-reachability form is the "
+            f"open ROADMAP item 'Longest-path matrix memory'")
     lp = np.full((N, N), NEG_PATH, dtype=np.int32)
     np.fill_diagonal(lp, 0)
     dur = inst.dur.astype(np.int32)

@@ -33,6 +33,10 @@ class ILPResult:
     start: np.ndarray
     status: int
     message: str
+    # HiGHS dual bound: a valid lower bound on the optimal cost even when
+    # the solve exits on time_limit/mip_gap; == cost at a proven optimum.
+    lower_bound: float = float("-inf")
+    mip_gap: float = float("nan")
 
 
 def solve_ilp(inst: Instance, profile: PowerProfile,
@@ -105,13 +109,24 @@ def solve_ilp(inst: Instance, profile: PowerProfile,
         bounds=(bounds_lo, bounds_hi),
         options={"time_limit": time_limit, "mip_rel_gap": mip_gap},
     )
+    dual = getattr(res, "mip_dual_bound", None)
+    gap = getattr(res, "mip_gap", None)
     if res.x is None:
         return ILPResult(cost=np.inf, start=np.zeros(N, dtype=np.int64),
-                         status=res.status, message=res.message)
+                         status=res.status, message=res.message,
+                         lower_bound=float(dual) if dual is not None
+                         else float("-inf"),
+                         mip_gap=float(gap) if gap is not None
+                         else float("nan"))
     x = res.x[:n_s]
     start = np.zeros(N, dtype=np.int64)
     for v in range(N):
         seg = x[offs[v]:offs[v + 1]]
         start[v] = int(np.argmax(seg))
+    # a proven optimum (status 0, no gap slack) certifies bound == cost
+    lb = float(dual) if dual is not None else (
+        float(res.fun) if res.status == 0 else float("-inf"))
     return ILPResult(cost=float(res.fun), start=start, status=res.status,
-                     message=res.message)
+                     message=res.message, lower_bound=lb,
+                     mip_gap=float(gap) if gap is not None
+                     else float("nan"))

@@ -40,6 +40,23 @@ _COMMIT_K = 32       # default device commits per row per round
 # (the rest wait a round; expose per call as LocalSearchConfig.commit_k)
 
 
+def auto_commit_k(n_candidates: int,
+                  lo: int = 8, hi: int = 128) -> int:
+    """Pick the device commit width from instance gain density.
+
+    The ROADMAP's "nothing *chooses* K" item, closed at the small end
+    with a simple rule: one commit slot per ~4 candidate segments
+    (``n_candidates`` = the instance's candidate-point count, the size of
+    the greedy's segment skeleton), clamped to [lo, hi]. Dense-gain
+    instances (many candidate segments -> many independent improving
+    shifts per round) get wide commits and fewer device rounds; sparse
+    instances stay narrow so one round's commits rarely invalidate each
+    other. Any width keeps the termination guarantee — the
+    sequential-reference polish runs regardless.
+    """
+    return int(np.clip(int(n_candidates) // 4, lo, hi))
+
+
 def _commit_round(inst, T, rem, start, gains, mu) -> bool:
     """Commit this round's kernel proposals in gain order, exactly."""
     dur = inst.dur

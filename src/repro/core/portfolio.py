@@ -299,7 +299,8 @@ def _assemble(names, prep: PreparedInstance, greedy: dict, ls_done: dict,
 def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                             variants=None, k: int = 3, mu: int = 10,
                             validate: bool = True, engine: str = "numpy",
-                            graphs=None, commit_k: int | None = None,
+                            graphs=None,
+                            commit_k: int | str | None = None,
                             ls_max_rounds: int = 200
                             ) -> list[list[dict[str, ScheduleResult]]]:
     """THE (instances x profiles x variants) scheduling pass.
@@ -324,8 +325,15 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     (instance, profile, variant) rows of a bucket ride one triple-vmapped
     device call — and advances each instance's (profile, ``-LS``-variant)
     rows as one batched device-resident hill climb (committing up to
-    ``commit_k`` proposals per row per round), polished to
+    ``commit_k`` proposals per row per round; ``"auto"`` scales the width
+    with the instance's candidate-segment count via
+    :func:`repro.core.local_search_jax.auto_commit_k`), polished to
     sequential-reference local optimality.
+
+    In the solver registry (:mod:`repro.core.solvers`) this pass is the
+    ``"heuristic"`` backend — one of several solvers behind
+    ``PlanRequest(solver=...)``, alongside the exact DP/ILP oracles and
+    the asap baseline.
     """
     if engine not in ("numpy", "jax"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -405,10 +413,18 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                 if n != "asap" and VARIANTS_BY_NAME[n].ls]
     ls_dones: list[list[dict]] = [[{} for _ in range(P)] for _ in range(I)]
     if ls_names and engine == "jax":
-        from repro.core.local_search_jax import local_search_portfolio_multi
+        from repro.core.local_search_jax import auto_commit_k, \
+            local_search_portfolio_multi
 
         keys = [VARIANTS_BY_NAME[n] for n in ls_names]
         for i in range(I):
+            ck = commit_k
+            if ck == "auto":
+                # commit width from this instance's gain density: scale
+                # with its candidate-segment count (max over the grid row)
+                ck = auto_commit_k(max(
+                    len(overlays[i][p].segs[r][0])
+                    for p in range(P) for r in rvals))
             t0 = time.perf_counter()
             rows = np.stack(
                 [greedys[i][p][(v.score, v.weighted, v.refined)][0]
@@ -421,7 +437,7 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
             improved = local_search_portfolio_multi(
                 instances[i], graphs[i].T, row_budgets, rows, mu=mu,
                 max_rounds=ls_max_rounds, ctx=graphs[i].ls_graph,
-                commit_k=commit_k)
+                commit_k=ck)
             dt = (time.perf_counter() - t0) / len(rows)
             for p in range(P):
                 ls_dones[i][p] = {n: (improved[p * len(keys) + j], dt)

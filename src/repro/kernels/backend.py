@@ -34,6 +34,22 @@ def resolve_mode(interpret: bool | None) -> str:
     return "interpret" if interpret else "pallas"
 
 
+def resolve_solver(solver: str | None):
+    """Resolve a ``PlanRequest.solver`` spelling to a registered
+    :class:`repro.core.solvers.Solver`.
+
+    The solver-axis generalization of :func:`resolve_engine`: the solver
+    picks WHICH backend serves the grid (heuristic portfolio, exact
+    ILP/DP dispatch, asap baseline), while ``engine=`` remains the
+    heuristic solver's sub-knob (numpy vs jax fan-out). ``None``/"auto"
+    resolve to the heuristic solver — the historical behaviour of every
+    request that predates the axis.
+    """
+    from repro.core.solvers import get_solver
+
+    return get_solver("heuristic" if solver in (None, "auto") else solver)
+
+
 def resolve_engine(engine: str | None, fanout: int = 1) -> str:
     """Resolve a scheduling-engine request to ``"numpy"`` or ``"jax"``.
 
@@ -43,7 +59,8 @@ def resolve_engine(engine: str | None, fanout: int = 1) -> str:
     actually fans out (``fanout`` = number of (instance, profile) cells
     > 1 — replanning loops amortize the jit cache and the vmapped launch
     pays off immediately), and the numpy engine for one-off single-cell
-    calls (where compile latency would dominate).
+    calls (where compile latency would dominate). The heuristic-solver
+    sub-knob of the wider :func:`resolve_solver` axis.
     """
     if engine in (None, "auto"):
         return "jax" if fanout > 1 else "numpy"

@@ -1,0 +1,274 @@
+"""Pluggable solver axis: registry resolution, the exact stack via
+``PlanRequest(solver=...)`` (dp_poly == dp_pseudo == ILP on uniprocessor
+chains, ILP lower-bounds every heuristic on multiprocessor instances),
+PlanResult.gap()/compare(), the asap baseline solver, commit_k="auto",
+and the longest-path-matrix memory guard."""
+import numpy as np
+import pytest
+
+from repro.api import LocalSearchConfig, Planner, PlanRequest
+from repro.cluster import make_cluster
+from repro.core import (
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    get_solver,
+    schedule_cost,
+    solver_names,
+    validate_schedule,
+)
+from repro.core.carbon import PowerProfile
+from repro.core.dag import trivial_mapping
+from repro.core.dp_uniproc import dp_poly, dp_pseudo, is_uniprocessor
+from repro.workflows import layered_random
+
+
+def _require_highs():
+    opt = pytest.importorskip("scipy.optimize")
+    if not hasattr(opt, "milp"):
+        pytest.skip("scipy.optimize.milp (HiGHS) unavailable")
+
+
+def _tight_profile(inst, plat, T, J=4, seed=0):
+    """A budget so tight that scheduling decisions carry nonzero cost."""
+    rng = np.random.default_rng(seed)
+    bounds = np.unique(np.round(np.linspace(0, T, J + 1)).astype(np.int64))
+    budget = plat.idle_total + rng.integers(
+        0, max(int(inst.task_work.max()) // 2, 2), size=len(bounds) - 1)
+    return PowerProfile(bounds=bounds, budget=budget)
+
+
+def _uniproc(seed=7, factor=1.4):
+    plat = make_cluster(1, seed=0)
+    wf = layered_random(5, 3, seed=seed)
+    inst = build_instance(wf, trivial_mapping(wf, plat, by="single"), plat)
+    T = deadline_from_asap(inst, factor)
+    return plat, inst, _tight_profile(inst, plat, T, seed=seed)
+
+
+def _multiproc(seed=0, factor=1.5):
+    """Tiny multiprocessor instance (short durations keep the ILP fast)."""
+    rng = np.random.default_rng(seed)
+    plat = make_cluster(1, seed=0)
+    wf = layered_random(6, 3, seed=seed)
+    inst = build_instance(wf, trivial_mapping(wf, plat), plat,
+                          dur=rng.integers(1, 6, size=wf.n))
+    T = deadline_from_asap(inst, factor)
+    return plat, inst, _tight_profile(inst, plat, T, seed=seed)
+
+
+# --- registry resolution ----------------------------------------------------
+
+def test_solver_registry_resolution():
+    from repro.kernels.backend import resolve_solver
+
+    assert set(solver_names()) >= {"heuristic", "exact", "ilp", "dp",
+                                   "asap"}
+    assert resolve_solver(None).name == "heuristic"
+    assert resolve_solver("auto").name == "heuristic"
+    assert resolve_solver("exact") is get_solver("exact")
+    with pytest.raises(ValueError, match="unknown solver"):
+        resolve_solver("simplex")
+    plat, inst, prof = _uniproc()
+    with pytest.raises(ValueError, match="unknown solver"):
+        PlanRequest(instances=inst, profiles=prof,
+                    solver="simplex").resolve()
+    # non-heuristic solvers serve exactly their own variant column
+    with pytest.raises(ValueError, match="exactly the variant"):
+        PlanRequest(instances=inst, profiles=prof, solver="exact",
+                    variants=("slack",)).resolve()
+    _, _, names = PlanRequest(instances=inst, profiles=prof,
+                              solver="exact").resolve()
+    assert names == ("exact",)
+
+
+# --- exact stack on the solver axis ----------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_exact_resolves_to_dp_on_uniprocessor(seed):
+    plat, inst, prof = _uniproc(seed=seed)
+    assert is_uniprocessor(inst)
+    planner = Planner(plat, engine="numpy")
+    # check=True cross-validates every cell against the pseudo-poly oracle
+    ex = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                  solver="exact",
+                                  solver_options={"check": True}))
+    dp = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                  solver="dp"))
+    c_poly, s_poly = dp_poly(inst, prof)
+    c_pseudo, _ = dp_pseudo(inst, prof)
+    assert ex.solver == "exact" and ex.variants == ("exact",)
+    assert int(ex.costs[0, 0, 0]) == c_poly == c_pseudo \
+        == int(dp.costs[0, 0, 0])
+    assert ex.lower_bound is not None \
+        and int(ex.lower_bound[0, 0]) == c_poly
+    got = ex.result(variant="exact")
+    validate_schedule(inst, prof, got.start)
+    assert schedule_cost(inst, prof, got.start) == c_poly
+    assert schedule_cost(inst, prof, s_poly) == c_poly
+
+
+def test_dp_solver_rejects_multiprocessor():
+    plat, inst, prof = _multiproc()
+    assert not is_uniprocessor(inst)
+    with pytest.raises(ValueError, match="single-processor"):
+        Planner(plat, engine="numpy").plan(
+            PlanRequest(instances=inst, profiles=prof, solver="dp"))
+
+
+@pytest.mark.ilp
+@pytest.mark.parametrize("seed", range(2))
+def test_ilp_equals_dp_on_uniprocessor_via_solver_axis(seed):
+    _require_highs()
+    plat, inst, prof = _uniproc(seed=seed + 20)
+    planner = Planner(plat, engine="numpy")
+    ilp = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="ilp",
+                                   solver_options={"time_limit": 120}))
+    dp = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                  solver="dp"))
+    assert int(ilp.costs[0, 0, 0]) == int(dp.costs[0, 0, 0])
+    assert int(ilp.lower_bound[0, 0]) == int(dp.costs[0, 0, 0])
+    validate_schedule(inst, prof, ilp.result(variant="ilp").start)
+
+
+@pytest.mark.ilp
+@pytest.mark.parametrize("seed", range(2))
+def test_exact_lower_bounds_heuristics_on_multiprocessor(seed):
+    _require_highs()
+    plat, inst, prof = _multiproc(seed=seed)
+    planner = Planner(plat, engine="numpy")
+    ex = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                  solver="exact",
+                                  solver_options={"time_limit": 120}))
+    heur = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    base = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                    solver="asap"))
+    opt = int(ex.costs[0, 0, 0])
+    validate_schedule(inst, prof, ex.result(variant="exact").start)
+    # the exact optimum lower-bounds every heuristic and the baseline
+    assert (heur.costs[0, 0] >= opt).all()
+    assert int(base.costs[0, 0, 0]) >= opt
+    gaps = heur.gap(ex)
+    assert gaps.shape == (1, 1) and gaps[0, 0] >= 1.0 - 1e-12
+    table = heur.compare(ex)
+    assert "exact" in table and table.count("\n") >= len(heur.variants)
+
+
+def test_asap_solver_matches_asap_variant():
+    plat, inst, prof = _multiproc(seed=1)
+    planner = Planner(plat, engine="numpy")
+    base = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                    solver="asap"))
+    legacy = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                      variants="asap"))
+    assert base.solver == "asap" and base.variants == ("asap",)
+    assert base.lower_bound is None
+    a, b = base.result(variant="asap"), legacy.result(variant="asap")
+    assert (a.start == b.start).all() and a.cost == b.cost
+
+
+def test_gap_requires_bound_and_handles_zero_cost():
+    plat, inst, prof = _uniproc(seed=3)
+    planner = Planner(plat, engine="numpy")
+    heur = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    with pytest.raises(ValueError, match="lower bound"):
+        heur.gap()
+    ex = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                  solver="exact"))
+    assert heur.gap(ex)[0, 0] >= 1.0 - 1e-12
+    # a free profile makes everything cost 0: gap convention -> exactly 1
+    free = PowerProfile(
+        bounds=np.asarray([0, prof.T], dtype=np.int64),
+        budget=np.asarray(
+            [plat.idle_total + int(inst.task_work.sum()) + 1],
+            dtype=np.int64))
+    h0 = planner.plan(PlanRequest(instances=inst, profiles=free))
+    e0 = planner.plan(PlanRequest(instances=inst, profiles=free,
+                                  solver="exact"))
+    assert int(e0.costs[0, 0, 0]) == 0
+    assert h0.gap(e0)[0, 0] == 1.0
+    with pytest.raises(ValueError, match="grid shapes"):
+        h0.gap(planner.plan(PlanRequest(
+            instances=[inst, inst], profiles=free, solver="exact")))
+
+
+@pytest.mark.ilp
+def test_exact_solver_dispatches_per_instance_in_one_request():
+    """One request mixing a uniprocessor and a multiprocessor instance:
+    the exact solver must route each to its oracle (DP / ILP)."""
+    _require_highs()
+    plat, uni, prof_u = _uniproc(seed=4)
+    _, multi, prof_m = _multiproc(seed=2)
+    ex = Planner(plat, engine="numpy").plan(PlanRequest(
+        instances=[uni, multi], profiles=[[prof_u], [prof_m]],
+        solver="exact", solver_options={"time_limit": 120}))
+    assert ex.shape == (2, 1, 1)
+    c_dp, _ = dp_poly(uni, prof_u)
+    assert int(ex.costs[0, 0, 0]) == c_dp
+    assert (ex.lower_bound == ex.costs[:, :, 0]).all()
+    validate_schedule(multi, prof_m, ex.results[1][0]["exact"].start)
+
+
+# --- commit_k="auto" --------------------------------------------------------
+
+def test_auto_commit_k_rule_and_config():
+    from repro.core.local_search_jax import auto_commit_k
+
+    assert auto_commit_k(0) == 8
+    assert auto_commit_k(10**6) == 128
+    assert auto_commit_k(200) == 50
+    ks = [auto_commit_k(n) for n in range(0, 2000, 50)]
+    assert ks == sorted(ks)                     # monotone in density
+    assert LocalSearchConfig(commit_k="auto").commit_k == "auto"
+    with pytest.raises(ValueError):
+        LocalSearchConfig(commit_k=0)
+    with pytest.raises(ValueError):
+        LocalSearchConfig(commit_k="bogus")
+
+
+@pytest.mark.device
+def test_commit_k_auto_matches_sequential_reference():
+    """commit_k='auto' must land every -LS row on a state the sequential
+    reference cannot improve (same guarantee as any fixed K)."""
+    from repro.core import generate_profile, heft_mapping
+    from repro.core.local_search import local_search
+    from repro.workflows import make_workflow
+
+    plat = make_cluster(1, seed=4)
+    wf = make_workflow("eager", 3, seed=4)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    prof = generate_profile("S1", deadline_from_asap(inst, 2.0), plat,
+                            J=16, seed=4)
+    res = Planner(plat, engine="jax",
+                  ls=LocalSearchConfig(commit_k="auto")).plan(
+        PlanRequest(instances=inst, profiles=prof))
+    for name in res.variants:
+        if not name.endswith("-LS"):
+            continue
+        got = res.results[0][0][name]
+        validate_schedule(inst, prof, got.start)
+        assert got.cost <= res.results[0][0][name[:-3]].cost
+        polished = local_search(inst, prof, plat, got.start, max_rounds=1)
+        assert (polished == got.start).all(), name
+
+
+# --- longest-path matrix memory guard ---------------------------------------
+
+def test_lp_matrix_memory_guard():
+    from repro.core.greedy_jax import (
+        LP_MAX_BYTES,
+        longest_path_matrix,
+        lp_matrix_bytes,
+    )
+
+    assert lp_matrix_bytes(4000) == 64_000_000      # the ROADMAP number
+    assert lp_matrix_bytes(5000) < LP_MAX_BYTES < lp_matrix_bytes(6000)
+    _, inst, _ = _multiproc(seed=3)
+    lp = longest_path_matrix(inst)                  # small N: fine
+    assert lp.shape == (inst.num_tasks, inst.num_tasks)
+    with pytest.raises(MemoryError, match="blocked / sparse-reachability"):
+        longest_path_matrix(inst, max_bytes=8)
+    (lp2,) = [longest_path_matrix(inst, max_bytes=lp_matrix_bytes(
+        inst.num_tasks))]                           # exact budget passes
+    assert (lp2 == lp).all()
