@@ -7,7 +7,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-device test-host test-exact bench bench-smoke \
+.PHONY: test test-device test-host test-exact test-big bench bench-smoke \
 	planner-smoke verify
 
 test:
@@ -15,15 +15,20 @@ test:
 
 # jax-engine / device fan-out tests only (the `device` pytest marker)
 test-device:
-	$(PY) -m pytest -x -q -m device
+	$(PY) -m pytest -x -q -m "device and not big"
 
 # everything but the device tests (quick CPU-only signal)
 test-host:
-	$(PY) -m pytest -x -q -m "not device"
+	$(PY) -m pytest -x -q -m "not device and not big"
 
 # the exact-solver stack (HiGHS ILP; self-skips where scipy.milp is absent)
 test-exact:
 	$(PY) -m pytest -x -q -m ilp
+
+# big-instance regressions: over-the-dense-envelope instances streamed
+# through the blocked longest-path form (deselected from tier-1)
+test-big:
+	$(PY) -m pytest -x -q -m big
 
 bench:
 	$(PY) -m benchmarks.run --only portfolio

@@ -134,6 +134,112 @@ def _gap_table(gap_time_limit: float) -> dict:
     return gaps
 
 
+def _lp_blocked_section(cases) -> dict:
+    """Dense-vs-blocked longest-path engines on one small instance, plus
+    an over-envelope instance only the blocked form can serve (its dense
+    matrix raises MemoryError under the same lp budget), plus the
+    steady-state jit cache-miss guarantee: the blocked path retraces
+    nothing and adds no misses to the dense grid executable either."""
+    from repro.cluster import make_cluster
+    from repro.core import build_instance, deadline_from_asap, heft_mapping
+    from repro.core.greedy_jax import (
+        BlockedLP,
+        _blocked_impl,
+        _impl,
+        longest_path_matrix,
+        lp_block_bytes,
+        lp_matrix_bytes,
+        pad_dims,
+    )
+    from repro.core.portfolio import _COMBOS, prepare_graph, \
+        schedule_portfolio_grid
+    from repro.workflows import wfgen_scale
+
+    V = len(_COMBOS)        # unique greedy orders the full grid fans out
+    c = cases[0]
+    inst, plat, prof = c.inst, c.platform, c.profile
+    N = inst.num_tasks
+    Np, _ = pad_dims(N, prof.T)
+
+    def timed_grid(graph, reps=3):
+        best = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = schedule_portfolio_grid([inst], [[prof]], plat,
+                                          engine="jax", graphs=[graph])
+            best.append(time.perf_counter() - t0)
+        return res, float(np.median(best))
+
+    g_dense = prepare_graph(inst, plat, prof.T)
+    timed_grid(g_dense, reps=1)                    # warm the bucket
+    res_dense, t_dense = timed_grid(g_dense)
+
+    budget = lp_block_bytes(4, V, Np)
+    if budget >= lp_matrix_bytes(N):               # tiny N: force the form
+        budget = lp_block_bytes(1, V, Np)
+    g_blk = prepare_graph(inst, plat, prof.T)
+    g_blk._lp = BlockedLP(inst, budget_bytes=budget)
+    timed_grid(g_blk, reps=1)                      # warm the chunk shape
+    res_blk, t_blk = timed_grid(g_blk)
+    for name, ref in res_dense[0][0].items():      # engines must agree
+        assert res_blk[0][0][name].cost == ref.cost, name
+
+    # steady state: re-running the blocked path must add zero jit cache
+    # misses — neither to its own chunked executable nor to the dense grid
+    grid_fn, blk_fn = _impl()["grid"], _blocked_impl()["multi"]
+    before = grid_fn._cache_size() + blk_fn._cache_size()
+    schedule_portfolio_grid([inst], [[prof]], plat, engine="jax",
+                            graphs=[g_blk])
+    misses_steady = grid_fn._cache_size() + blk_fn._cache_size() - before
+    assert misses_steady == 0
+
+    # over-envelope: an instance whose dense matrix exceeds the (reduced)
+    # lp budget — longest_path_matrix refuses, the blocked form schedules
+    wf = wfgen_scale("eager", 3 * N, seed=1)
+    big = build_instance(wf, heft_mapping(wf, make_cluster(1, seed=1)),
+                         make_cluster(1, seed=1))
+    from repro.core import generate_profile
+    bT = deadline_from_asap(big, 1.5)
+    bprof = generate_profile("S1", bT, make_cluster(1, seed=1), J=16, seed=1)
+    bNp, _ = pad_dims(big.num_tasks, bT)
+    bbudget = max(lp_matrix_bytes(big.num_tasks) // 8,
+                  lp_block_bytes(2, V, bNp))
+    dense_raises = False
+    try:
+        longest_path_matrix(big, max_bytes=bbudget)
+    except MemoryError:
+        dense_raises = True
+    g_big = prepare_graph(big, make_cluster(1, seed=1), bT,
+                          lp_budget_bytes=bbudget)
+    schedule_portfolio_grid([big], [[bprof]], make_cluster(1, seed=1),
+                            engine="jax", graphs=[g_big])       # warm
+    t0 = time.perf_counter()
+    schedule_portfolio_grid([big], [[bprof]], make_cluster(1, seed=1),
+                            engine="jax", graphs=[g_big])
+    t_big = time.perf_counter() - t0
+
+    return {
+        "small": {
+            "case": c.name,
+            "n_tasks": N,
+            "dense_us": t_dense * 1e6,
+            "blocked_us": t_blk * 1e6,
+            "blocked_over_dense": t_blk / t_dense,
+            "budget_bytes": int(budget),
+            "block_width": int(g_blk.lp().chunk_width(V, Np)),
+        },
+        "over_envelope": {
+            "n_tasks": int(big.num_tasks),
+            "lp_bytes": int(lp_matrix_bytes(big.num_tasks)),
+            "budget_bytes": int(bbudget),
+            "dense_raises": dense_raises,
+            "blocked_us": t_big * 1e6,
+            "block_width": int(g_big.lp().chunk_width(V, bNp)),
+        },
+        "jit_cache_misses_steady": int(misses_steady),
+    }
+
+
 def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         with_jax: bool = True, n_profiles: int = 8,
         gap_time_limit: float = 20.0):
@@ -275,6 +381,8 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
             },
         }
 
+    lp_blocked = _lp_blocked_section(cases) if with_jax else None
+
     gaps = _gap_table(gap_time_limit)
 
     n = len(cases)
@@ -296,6 +404,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
             JAX_FANOUT_BEFORE_US if on_reference else None,
         "multi_profile": multi,
         "planner": planner_stats,
+        "lp_blocked": lp_blocked,
         "gaps": gaps,
         "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
@@ -318,6 +427,13 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
              f";grid_cells={g['cells']}"
              f";buckets={g['shape_buckets']}"
              f";cold_misses={g['jit_cache_misses_cold']}")
+    if lp_blocked:
+        sm, ov = lp_blocked["small"], lp_blocked["over_envelope"]
+        emit("portfolio_lp_blocked", sm["blocked_us"],
+             f"blocked/dense={sm['blocked_over_dense']:.2f}x"
+             f";over_envelope_n={ov['n_tasks']}"
+             f";dense_raises={ov['dense_raises']}"
+             f";steady_misses={lp_blocked['jit_cache_misses_steady']}")
     for gc in gaps["cases"]:
         asap_s = ("n/a" if gc["gap_asap"] is None
                   else f"{gc['gap_asap']:.3f}")

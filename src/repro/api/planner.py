@@ -57,17 +57,25 @@ class Planner:
       graph_cache: how many ``PreparedGraph`` precomputes to keep (FIFO).
         A cached graph pins its instance, so equal ``id()`` keys cannot
         collide while an entry lives.
+      lp_budget_bytes: jax engine's per-instance longest-path memory
+        envelope (None = :data:`repro.core.greedy_jax.LP_MAX_BYTES`).
+        Instances whose dense O(N^2) matrix fits ride the device-resident
+        fast path; bigger ones stream the blocked form
+        (:class:`repro.core.greedy_jax.BlockedLP`) bit-identically, so
+        ``engine="jax"`` serves instances far past the dense envelope.
     """
 
     def __init__(self, platform, engine: str = "auto", k: int = 3,
                  ls: LocalSearchConfig | None = None, validate: bool = True,
-                 graph_cache: int = 32):
+                 graph_cache: int = 32,
+                 lp_budget_bytes: int | None = None):
         resolve_engine(engine)              # fail fast on unknown engines
         self.platform = platform
         self.engine = engine
         self.k = int(k)
         self.ls = ls if ls is not None else LocalSearchConfig()
         self.validate = validate
+        self.lp_budget_bytes = lp_budget_bytes
         self._graph_cache = int(graph_cache)
         self._graphs: collections.OrderedDict[tuple, PreparedGraph] = \
             collections.OrderedDict()
@@ -81,7 +89,8 @@ class Planner:
         if g is not None and g.inst is inst:
             self._graphs.move_to_end(key)
             return g
-        g = prepare_graph(inst, self.platform, int(T), k=self.k)
+        g = prepare_graph(inst, self.platform, int(T), k=self.k,
+                          lp_budget_bytes=self.lp_budget_bytes)
         self.seed_graph(g)
         return g
 

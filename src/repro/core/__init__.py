@@ -18,6 +18,14 @@ from repro.core.carbon import (  # noqa: F401
 )
 from repro.core.dag import FixedMapping, Instance, build_instance, trivial_mapping  # noqa: F401
 from repro.core.estlst import asap_schedule, compute_est, compute_lst, makespan  # noqa: F401
+from repro.core.greedy_jax import (  # noqa: F401
+    BlockedLP,
+    LP_MAX_BYTES,
+    longest_path_matrix,
+    lp_block_bytes,
+    lp_for,
+    lp_matrix_bytes,
+)
 from repro.core.heft import heft_mapping  # noqa: F401
 from repro.core.portfolio import (  # noqa: F401
     PORTFOLIO_VARIANTS,

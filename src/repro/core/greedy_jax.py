@@ -37,11 +37,30 @@ below the real horizon), and the big per-call buffers (budget timeline,
 candidate masks) are donated to the runtime off-CPU so repeat calls reuse
 device memory.
 
+Two longest-path representations serve the scan, chosen by
+:func:`repro.kernels.backend.resolve_lp_form` against an ``lp_budget_bytes``
+envelope (default :data:`LP_MAX_BYTES`):
+
+* dense — the O(N^2) int32 matrix above, resident on device; the fast path
+  for the replanning regime (N ~ 10^2-10^3);
+* blocked (:class:`BlockedLP`) — the big-instance path: the scan streams
+  the placement order in fixed-width chunks, and per chunk a host-side
+  block-wise max-plus sweep over the level-ordered adjacency produces just
+  that chunk's lp rows (descendant distances of the placed tasks) and
+  columns (ancestor distances), fed to the chunked scan as ``lax.scan``
+  inputs while the greedy state stays device-resident between chunk
+  launches. Peak lp memory is O(N * B) for chunk width B
+  (:meth:`BlockedLP.chunk_width` picks B from the budget), so instances far
+  past the dense envelope schedule on ``engine="jax"`` — bit-identical to
+  the dense path by construction (and by ``tests/test_lp_blocked.py``).
+
 Intended for on-device replanning (CarbonGate-scale instances, N ~ 10^2-10^3,
-T ~ 10^3-10^4); the numpy path remains the big-instance scheduler.
+T ~ 10^3-10^4); bigger instances stream through :class:`BlockedLP` or use
+the numpy path (no matrix at all).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import numpy as np
@@ -61,9 +80,8 @@ T_BUCKET = 256                         # time-axis shape bucket
 # Device envelope for the dense longest-path matrix: the matrix is
 # O(N^2) int32 (64 MiB at N=4000), fine for the device path's
 # N ~ 10^2-10^3 regime but a silent multi-hundred-MiB allocation beyond
-# it. 128 MiB admits N ~ 5800; bigger instances must either use
-# engine="numpy" (no matrix) or wait for the blocked/sparse-reachability
-# form (ROADMAP: "Longest-path matrix memory").
+# it. 128 MiB admits N ~ 5800; bigger instances stream through the
+# blocked form (BlockedLP) or use engine="numpy" (no matrix at all).
 LP_MAX_BYTES = 128 * 2**20
 
 
@@ -72,10 +90,22 @@ def lp_matrix_bytes(num_tasks: int) -> int:
     return 4 * int(num_tasks) * int(num_tasks)
 
 
+def lp_block_bytes(block: int, n_orders: int, num_tasks: int) -> int:
+    """Bytes one streamed chunk of the blocked form needs on device:
+    ``block`` scan steps x ``n_orders`` score orders x an lp row AND an lp
+    column of padded width ``num_tasks``, int32 each."""
+    return 2 * 4 * int(block) * int(n_orders) * int(num_tasks)
+
+
 def longest_path_matrix(inst: Instance,
                         max_bytes: int | None = None) -> np.ndarray:
     """``lp[u, t]`` = max over u->t paths of the path's duration sum
-    (excluding ``dur[t]``); ``lp[v, v] = 0``; unreachable ~ ``NEG_PATH``.
+    (excluding ``dur[t]``); ``lp[v, v] = 0``; unreachable = ``NEG_PATH``
+    exactly (canonical: every no-path entry holds the sentinel, so the
+    dense matrix is bit-comparable with :class:`BlockedLP` blocks, whose
+    backward column sweeps would otherwise drift the phantom values
+    differently — semantics-free either way, since the scan's est/lst
+    updates cannot be won by any value below 0).
 
     Profile-independent: one O(E*N) host sweep per instance serves every
     profile, variant and replanning round of the device path. The byte
@@ -90,19 +120,137 @@ def longest_path_matrix(inst: Instance,
         raise MemoryError(
             f"longest-path matrix needs {need / 2**20:.1f} MiB "
             f"(N={N} tasks, O(N^2) int32), over the "
-            f"{limit / 2**20:.0f} MiB device envelope; use "
-            f"engine='numpy' for this instance or pass a larger "
-            f"max_bytes — the blocked / sparse-reachability form is the "
-            f"open ROADMAP item 'Longest-path matrix memory'")
-    lp = np.full((N, N), NEG_PATH, dtype=np.int32)
-    np.fill_diagonal(lp, 0)
-    dur = inst.dur.astype(np.int32)
-    for v in inst.topo:
-        ps = inst.preds(v)
-        if len(ps):
-            cand = lp[:, ps] + dur[ps][None, :]
-            np.maximum(lp[:, v], cand.max(axis=1), out=lp[:, v])
-    return lp
+            f"{limit / 2**20:.0f} MiB lp budget; the jax engine streams "
+            f"such instances through the blocked form instead — raise "
+            f"lp_budget_bytes (prepare_graph / schedule_portfolio_grid / "
+            f"Planner) or build a BlockedLP(inst) directly; engine="
+            f"'numpy' needs no matrix at all")
+    # the dense matrix IS the all-rows block of the blocked form — one
+    # sweep implementation (BlockedLP.rows) serves both representations,
+    # so their bitwise agreement cannot drift
+    return BlockedLP(inst, budget_bytes=limit).rows(np.arange(N))
+
+
+@dataclasses.dataclass
+class BlockedLP:
+    """Blocked longest-path relaxation: the O(N*B) streaming form.
+
+    Holds no matrix at all — :meth:`rows` and :meth:`cols` run the
+    forward/backward max-plus sweep over the topo-ordered adjacency for
+    just the requested tasks, and :meth:`chunk_tensors` assembles the
+    bucket-padded per-chunk scan inputs the blocked device scan consumes
+    (``repro.core.greedy_jax._blocked_impl``). Values are bit-identical
+    to the canonical dense :func:`longest_path_matrix` entries
+    (``materialize`` assembles the full matrix for differential tests).
+
+    ``budget_bytes`` bounds the streamed chunk buffers
+    (:func:`lp_block_bytes`); :meth:`chunk_width` turns it into the scan
+    chunk width and raises ``MemoryError`` when even a single-step chunk
+    (the O(N) floor) does not fit.
+    """
+
+    inst: Instance
+    budget_bytes: int = LP_MAX_BYTES
+
+    def rows(self, tasks) -> np.ndarray:
+        """``lp[tasks, :N]`` — descendant distances, one forward sweep."""
+        inst = self.inst
+        tasks = np.asarray(tasks, dtype=np.int64)
+        N = inst.num_tasks
+        d = np.full((len(tasks), N), NEG_PATH, dtype=np.int32)
+        d[np.arange(len(tasks)), tasks] = 0
+        dur = inst.dur.astype(np.int32)
+        for v in inst.topo:
+            ps = inst.preds(v)
+            if len(ps):
+                cand = d[:, ps] + dur[ps][None, :]
+                np.maximum(d[:, v], cand.max(axis=1), out=d[:, v])
+        # canonicalize: phantom entries (sentinel plus dur drift picked up
+        # along no-path chains) all become NEG_PATH; true path values are
+        # >= 0 (durations are positive, diagonal is 0)
+        d[d < 0] = NEG_PATH
+        d[np.arange(len(tasks)), tasks] = 0
+        return d
+
+    def cols(self, tasks) -> np.ndarray:
+        """``lp[:N, tasks].T`` — ancestor distances, one backward sweep."""
+        inst = self.inst
+        tasks = np.asarray(tasks, dtype=np.int64)
+        N = inst.num_tasks
+        d = np.full((len(tasks), N), NEG_PATH, dtype=np.int32)
+        d[np.arange(len(tasks)), tasks] = 0
+        dur = inst.dur.astype(np.int32)
+        for v in inst.topo[::-1]:
+            ss = inst.succs(v)
+            if len(ss):
+                cand = d[:, ss] + dur[v]
+                np.maximum(d[:, v], cand.max(axis=1), out=d[:, v])
+        d[d < 0] = NEG_PATH
+        d[np.arange(len(tasks)), tasks] = 0
+        return d
+
+    def chunk_width(self, n_orders: int, padded_n: int) -> int:
+        """Scan chunk width B for ``n_orders`` score orders at padded task
+        count ``padded_n``: the largest width whose chunk buffers fit
+        ``budget_bytes``, clamped to a divisor of ``padded_n`` so every
+        chunk launch shares one compiled shape."""
+        floor = lp_block_bytes(1, n_orders, padded_n)
+        width = int(self.budget_bytes) // floor
+        if width < 1:
+            raise MemoryError(
+                f"blocked longest-path streaming needs at least {floor} "
+                f"bytes (one scan step x {n_orders} orders x 2 lp "
+                f"vectors of padded width {padded_n}, int32), over the "
+                f"{self.budget_bytes} byte lp budget; raise "
+                f"lp_budget_bytes or use engine='numpy'")
+        if width >= padded_n:
+            return padded_n
+        B = 1
+        while B * 2 <= width and padded_n % (B * 2) == 0:
+            B *= 2
+        return B
+
+    def chunk_tensors(self, vs: np.ndarray, padded_n: int):
+        """Per-chunk scan inputs for order chunk ``vs`` [V, B]: int32
+        (rows, cols), each [V, B, padded_n]. Padded task ids (>= N) get
+        the padded identity row/column (``NEG_PATH`` off-diagonal, 0 on
+        it), exactly the dense padded matrix's entries."""
+        V, B = vs.shape
+        flat = np.asarray(vs, dtype=np.int64).ravel()
+        N = self.inst.num_tasks
+        rows = np.full((V * B, padded_n), NEG_PATH, dtype=np.int32)
+        cols = np.full((V * B, padded_n), NEG_PATH, dtype=np.int32)
+        real = flat < N
+        if real.any():
+            uniq, inv = np.unique(flat[real], return_inverse=True)
+            rows[real, :N] = self.rows(uniq)[inv]
+            cols[real, :N] = self.cols(uniq)[inv]
+        rows[np.arange(V * B), flat] = 0
+        cols[np.arange(V * B), flat] = 0
+        return rows.reshape(V, B, padded_n), cols.reshape(V, B, padded_n)
+
+    def materialize(self, block: int = 64) -> np.ndarray:
+        """Assemble the full dense matrix from row blocks of width
+        ``block`` (differential tests / diagnostics only — this is the
+        O(N^2) allocation the streaming path exists to avoid)."""
+        N = self.inst.num_tasks
+        out = np.empty((N, N), dtype=np.int32)
+        for c in range(0, N, max(int(block), 1)):
+            idx = np.arange(c, min(c + max(int(block), 1), N))
+            out[idx] = self.rows(idx)
+        return out
+
+
+def lp_for(inst: Instance, budget_bytes: int | None = None):
+    """The dense-or-blocked union: the dense matrix when it fits the
+    budget (:func:`repro.kernels.backend.resolve_lp_form`), else a
+    :class:`BlockedLP` handle — every lp consumer accepts either."""
+    from repro.kernels.backend import resolve_lp_form
+
+    limit = LP_MAX_BYTES if budget_bytes is None else int(budget_bytes)
+    if resolve_lp_form(inst.num_tasks, limit) == "dense":
+        return longest_path_matrix(inst, max_bytes=limit)
+    return BlockedLP(inst, budget_bytes=limit)
 
 
 def _bucket_up(x: int, q: int) -> int:
@@ -114,6 +262,38 @@ def pad_dims(N: int, T: int) -> tuple[int, int]:
     return _bucket_up(N, N_BUCKET), _bucket_up(T, T_BUCKET)
 
 
+def _placement_step(jnp, dur, work):
+    """THE §5.2 placement step, shared by the dense scan (which looks
+    ``row``/``col`` up in the resident lp matrix) and the chunked blocked
+    scan (which receives them as scan inputs) — one body, so the
+    blocked==dense bit-identity contract cannot drift."""
+    big = jnp.int32(np.iinfo(np.int32).max // 4)
+
+    def step(state, v, row, col):
+        rem, mask, est, lst, start = state
+        T = rem.shape[0]
+        tgrid = jnp.arange(T, dtype=jnp.int32)
+        feas = mask[:-1] & (tgrid >= est[v]) & (tgrid <= lst[v])
+        any_f = feas.any()
+        val = jnp.where(feas, rem, -big)
+        s = jnp.where(any_f, jnp.argmax(val).astype(jnp.int32),
+                      est[v].astype(jnp.int32))
+        e = s + dur[v]
+        run = (tgrid >= s) & (tgrid < e)
+        rem = rem - jnp.where(run, work[v], 0).astype(rem.dtype)
+        mask = mask.at[s].set(True)
+        # numpy endpoint rule: e splits an interval only when e <= T; an
+        # overrunning task must not spuriously mark T a candidate point.
+        eidx = jnp.minimum(e, T)
+        mask = mask.at[eidx].set(mask[eidx] | (e <= T))
+        est = jnp.maximum(est, s + row)
+        lst = jnp.minimum(lst, s - col)
+        start = start.at[v].set(s)
+        return (rem, mask, est, lst, start)
+
+    return step
+
+
 @functools.lru_cache(maxsize=1)
 def _impl():
     import jax
@@ -122,29 +302,10 @@ def _impl():
 
     def greedy_scan(dur, work, lp, rem0, mask0, est0, lst0, order):
         """One variant's §5.2 greedy over precomputed inputs (vmappable)."""
-        T = rem0.shape[0]
-        tgrid = jnp.arange(T, dtype=jnp.int32)
-        big = jnp.int32(np.iinfo(np.int32).max // 4)
+        core = _placement_step(jnp, dur, work)
 
         def step(state, v):
-            rem, mask, est, lst, start = state
-            feas = mask[:-1] & (tgrid >= est[v]) & (tgrid <= lst[v])
-            any_f = feas.any()
-            val = jnp.where(feas, rem, -big)
-            s = jnp.where(any_f, jnp.argmax(val).astype(jnp.int32),
-                          est[v].astype(jnp.int32))
-            e = s + dur[v]
-            run = (tgrid >= s) & (tgrid < e)
-            rem = rem - jnp.where(run, work[v], 0).astype(rem.dtype)
-            mask = mask.at[s].set(True)
-            # numpy endpoint rule: e splits an interval only when e <= T; an
-            # overrunning task must not spuriously mark T a candidate point.
-            eidx = jnp.minimum(e, T)
-            mask = mask.at[eidx].set(mask[eidx] | (e <= T))
-            est = jnp.maximum(est, s + lp[v])
-            lst = jnp.minimum(lst, s - lp[:, v])
-            start = start.at[v].set(s)
-            return (rem, mask, est, lst, start), None
+            return core(state, v, lp[v], lp[:, v]), None
 
         N = est0.shape[0]
         state0 = (rem0, mask0, est0, lst0, jnp.zeros(N, jnp.int32))
@@ -171,12 +332,93 @@ def _impl():
     }
 
 
+@functools.lru_cache(maxsize=1)
+def _blocked_impl():
+    """The chunked twin of :func:`_impl`: one ``lax.scan`` over a chunk of
+    the placement order, lp rows/cols arriving as scan inputs instead of a
+    device-resident matrix, full greedy state (rem, mask, est, lst, start)
+    returned so the host chunk loop keeps it device-resident between
+    launches. The step body IS :func:`_placement_step` — the same closure
+    the dense scan runs — with ``row``/``col`` arriving as scan inputs
+    instead of matrix lookups, so chunked results are bit-identical to
+    the dense scan's by construction."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def chunk_scan(dur, work, rem, mask, est, lst, start, vs, rows, cols):
+        core = _placement_step(jnp, dur, work)
+
+        def step(state, xs):
+            return core(state, *xs), None
+
+        state, _ = lax.scan(step, (rem, mask, est, lst, start),
+                            (vs, rows, cols))
+        return state
+
+    # per-argument axes: (dur, work, rem, mask, est, lst, start, vs, rows,
+    # cols); unlike the dense scan, est/lst are per-row STATE here (they
+    # diverge across variants and profiles between chunk launches)
+    variant_axes = (None, None, 0, 0, 0, 0, 0, 0, 0, 0)
+    profile_axes = (None, None, 0, 0, 0, 0, 0, None, None, None)
+    fanout = jax.vmap(chunk_scan, in_axes=variant_axes)
+    multi = jax.vmap(fanout, in_axes=profile_axes)
+    # donate the state buffers so chained chunk launches reuse device
+    # memory (no-op + warning on CPU, so off-CPU only, as in _impl)
+    don = tuple(range(2, 7)) if jax.default_backend() != "cpu" else ()
+    return {
+        "fanout": jax.jit(fanout, donate_argnums=don),
+        "multi": jax.jit(multi, donate_argnums=don),
+    }
+
+
+def _blocked_fanout_padded(dur, work, blp: BlockedLP, budgets, masks,
+                           est, lst, orders) -> np.ndarray:
+    """All (profile, variant) greedy schedules of one blocked-lp instance,
+    chunk-streamed; every input already bucket-padded.
+
+    Args:
+      budgets: int [P, Tp]; masks: bool [P, V, Tp+1]; orders: int [V, Np];
+      dur/work/est/lst: [Np] (jnp or np).
+    Returns:
+      int32 np [P, V, Np] start times.
+    """
+    import jax.numpy as jnp
+
+    budgets = np.asarray(budgets, dtype=np.int32)
+    masks = np.asarray(masks, dtype=bool)
+    orders = np.asarray(orders, dtype=np.int32)
+    P, Tp = budgets.shape
+    V, Np = orders.shape
+    B = blp.chunk_width(V, Np)
+    est = np.asarray(est, dtype=np.int32)
+    lst = np.asarray(lst, dtype=np.int32)
+    state = (
+        jnp.asarray(np.repeat(budgets[:, None, :], V, axis=1)),
+        jnp.asarray(masks),
+        jnp.asarray(np.broadcast_to(est, (P, V, Np)).copy()),
+        jnp.asarray(np.broadcast_to(lst, (P, V, Np)).copy()),
+        jnp.asarray(np.zeros((P, V, Np), dtype=np.int32)),
+    )
+    impl = _blocked_impl()["multi"]
+    dur_j, work_j = jnp.asarray(dur), jnp.asarray(work)
+    for c in range(0, Np, B):
+        vs = orders[:, c:c + B]
+        rows, cols = blp.chunk_tensors(vs, Np)
+        state = impl(dur_j, work_j, *state, jnp.asarray(vs),
+                     jnp.asarray(rows), jnp.asarray(cols))
+    return np.asarray(state[4])
+
+
 def padded_shared(inst: Instance, est0, lst0, lp=None):
     """Bucket-padded profile-independent device tensors (jnp).
 
     Returns ``(dur, work, lp, est, lst, order_tail)`` at the
     :func:`pad_dims` bucket of ``inst``; ``order_tail`` is the suffix of
-    padded task ids every padded score order must end with.
+    padded task ids every padded score order must end with. ``lp`` may be
+    a precomputed dense matrix OR a :class:`BlockedLP` — the blocked
+    handle passes through in the lp slot (no device matrix exists) and
+    the fan-outs route accordingly.
     """
     import jax.numpy as jnp
 
@@ -184,9 +426,13 @@ def padded_shared(inst: Instance, est0, lst0, lp=None):
     Np, _ = pad_dims(N, 1)
     if lp is None:
         lp = longest_path_matrix(inst)
-    lp_p = np.full((Np, Np), NEG_PATH, dtype=np.int32)
-    lp_p[:N, :N] = lp
-    np.fill_diagonal(lp_p[N:, N:], 0)
+    if isinstance(lp, BlockedLP):
+        lp_j = lp
+    else:
+        lp_p = np.full((Np, Np), NEG_PATH, dtype=np.int32)
+        lp_p[:N, :N] = lp
+        np.fill_diagonal(lp_p[N:, N:], 0)
+        lp_j = jnp.asarray(lp_p)
     dur_p = np.zeros(Np, dtype=np.int32)
     dur_p[:N] = inst.dur
     work_p = np.zeros(Np, dtype=np.int32)
@@ -195,7 +441,7 @@ def padded_shared(inst: Instance, est0, lst0, lp=None):
     est_p[:N] = est0
     lst_p = np.zeros(Np, dtype=np.int32)
     lst_p[:N] = lst0
-    return (jnp.asarray(dur_p), jnp.asarray(work_p), jnp.asarray(lp_p),
+    return (jnp.asarray(dur_p), jnp.asarray(work_p), lp_j,
             jnp.asarray(est_p), jnp.asarray(lst_p),
             np.arange(N, Np, dtype=np.int32))
 
@@ -225,8 +471,10 @@ def pad_budget(unit_budget: np.ndarray, Tp: int) -> np.ndarray:
 def greedy_schedule_jax(inst: Instance, profile: PowerProfile,
                         platform: Platform, score: str = "press",
                         weighted: bool = False, refined: bool = False,
-                        k: int = 3):
-    """Jittable greedy; returns start times (jnp int32 [N])."""
+                        k: int = 3, lp_budget_bytes: int | None = None):
+    """Jittable greedy; returns start times (int32 [N]). Instances past
+    the ``lp_budget_bytes`` dense envelope stream through the blocked
+    form (:class:`BlockedLP`), bit-identically."""
     import jax.numpy as jnp
 
     T = profile.T
@@ -237,12 +485,18 @@ def greedy_schedule_jax(inst: Instance, profile: PowerProfile,
     order = task_order(inst, est0, lst0, score, weighted, platform)
     mask0 = candidate_mask(inst, profile, refined=refined, k=k)
     _, Tp = pad_dims(inst.num_tasks, T)
-    dur, work, lp, est_j, lst_j, tail = padded_shared(inst, est0, lst0)
+    dur, work, lp, est_j, lst_j, tail = padded_shared(
+        inst, est0, lst0, lp_for(inst, lp_budget_bytes))
     rem0 = pad_budget(profile.unit_budget(inst.idle_total), Tp)
-    order_p = pad_orders(np.asarray(order, np.int32)[None], tail)[0]
+    order_p = pad_orders(np.asarray(order, np.int32)[None], tail)
+    if isinstance(lp, BlockedLP):
+        starts = _blocked_fanout_padded(
+            dur, work, lp, rem0[None], pad_masks(mask0, Tp)[None, None],
+            est_j, lst_j, order_p)
+        return starts[0, 0, :inst.num_tasks]
     start = _impl()["single"](dur, work, lp, jnp.asarray(rem0),
                               jnp.asarray(pad_masks(mask0, Tp)),
-                              est_j, lst_j, jnp.asarray(order_p))
+                              est_j, lst_j, jnp.asarray(order_p[0]))
     return start[:inst.num_tasks]
 
 
@@ -265,6 +519,11 @@ def greedy_fanout_jax(inst: Instance, profile: PowerProfile, est0, lst0,
     dur, work, lp_j, est_j, lst_j, tail = \
         shared if shared is not None else padded_shared(inst, est0, lst0, lp)
     rem0 = pad_budget(profile.unit_budget(inst.idle_total), Tp)
+    if isinstance(lp_j, BlockedLP):
+        starts = _blocked_fanout_padded(
+            dur, work, lp_j, rem0[None], pad_masks(masks, Tp)[None],
+            est_j, lst_j, pad_orders(orders, tail))
+        return starts[0, :, :inst.num_tasks]
     starts = _impl()["fanout"](
         dur, work, lp_j, jnp.asarray(rem0),
         jnp.asarray(pad_masks(masks, Tp)), est_j, lst_j,
@@ -281,14 +540,37 @@ def greedy_fanout_grid_jax(bucket_rows):
         ``greedy_scan`` argument order ``(dur, work, lp, rem0 [P, Tp],
         mask0 [P, V, Tp+1], est0, lst0, order [V, Np])``; every row must
         already be padded to the same :func:`pad_dims` bucket (same P, V).
+        A row's ``lp`` slot may hold a :class:`BlockedLP` instead of the
+        dense matrix — such rows stream through the chunked scan (one
+        sequence of launches per blocked row; the dense rows of the
+        bucket still ride one grid launch together).
     Returns:
-      int32 [I, P, V, Np] start times (caller slices off the task padding).
+      int32 [I, P, V, Np] start times (caller slices off the task
+      padding); a numpy array when any row is blocked, a device array
+      otherwise.
     """
     import jax.numpy as jnp
 
-    stacked = tuple(jnp.stack([jnp.asarray(r[a]) for r in bucket_rows])
-                    for a in range(8))
-    return _impl()["grid"](*stacked)
+    rows = list(bucket_rows)
+    blocked = [isinstance(r[2], BlockedLP) for r in rows]
+    if not any(blocked):
+        stacked = tuple(jnp.stack([jnp.asarray(r[a]) for r in rows])
+                        for a in range(8))
+        return _impl()["grid"](*stacked)
+    out: list = [None] * len(rows)
+    dense_idx = [i for i, b in enumerate(blocked) if not b]
+    if dense_idx:
+        stacked = tuple(jnp.stack([jnp.asarray(rows[i][a])
+                                   for i in dense_idx]) for a in range(8))
+        dense_starts = np.asarray(_impl()["grid"](*stacked))
+        for j, i in enumerate(dense_idx):
+            out[i] = dense_starts[j]
+    for i, r in enumerate(rows):
+        if blocked[i]:
+            dur, work, blp, budgets, masks, est_j, lst_j, orders = r
+            out[i] = _blocked_fanout_padded(dur, work, blp, budgets,
+                                            masks, est_j, lst_j, orders)
+    return np.stack([np.asarray(o) for o in out])
 
 
 def greedy_fanout_multi_jax(inst: Instance, T: int, unit_budgets: np.ndarray,
@@ -309,6 +591,11 @@ def greedy_fanout_multi_jax(inst: Instance, T: int, unit_budgets: np.ndarray,
     if shared is None:
         shared = padded_shared(inst, est0, lst0, lp)
     dur, work, lp_j, est_j, lst_j, tail = shared
+    if isinstance(lp_j, BlockedLP):
+        starts = _blocked_fanout_padded(
+            dur, work, lp_j, pad_budget(unit_budgets, Tp),
+            pad_masks(masks, Tp), est_j, lst_j, pad_orders(orders, tail))
+        return starts[:, :, :inst.num_tasks]
     starts = _impl()["multi"](
         dur, work, lp_j, jnp.asarray(pad_budget(unit_budgets, Tp)),
         jnp.asarray(pad_masks(masks, Tp)), est_j, lst_j,

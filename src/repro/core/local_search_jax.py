@@ -116,7 +116,8 @@ def local_search_batched(inst: Instance, profile: PowerProfile,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=8)
-def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K):
+def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K,
+                padded: bool = False):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -125,23 +126,58 @@ def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K):
 
     f32 = jnp.float32
 
-    def climb_row(rem, start, t_real, dur, work, pred_mask, succ_mask):
+    def climb_row(rem, start, t_real, dur, work, pred_a, succ_a):
         """One row's full hill climb: rounds loop on device, no host sync.
 
-        rem int32 [T], start int32 [N]; pred/succ_mask bool [N, N] (direct
-        DAG+chain edges); t_real = the real horizon (T may be padded).
+        rem int32 [T], start int32 [N]; pred_a/succ_a describe the direct
+        G_c edges — bool [N, N] masks (``padded=False``, the dense form)
+        or ``(idx [N, D], ok [N, D])`` padded-CSR gather tables
+        (``padded=True``, the blocked big-instance form, bit-identical
+        bounds); t_real = the real horizon (T may be padded).
         """
         T = rem.shape[0]
         tgrid = jnp.arange(T, dtype=jnp.int32)
         durf = dur.astype(f32)
         workf = work.astype(f32)
 
+        if padded:
+            pidx, pok = pred_a
+            sidx, sok = succ_a
+
+            def pred_lo(start):           # max over preds of start + dur
+                return jnp.max(jnp.where(pok, (start + dur)[pidx], 0),
+                               axis=-1)
+
+            def succ_hi(start):           # min over succs of start
+                return jnp.min(jnp.where(sok, start[sidx], t_real),
+                               axis=-1)
+
+            def pred_lo_v(start, v):
+                return jnp.max(jnp.where(pok[v], (start + dur)[pidx[v]], 0))
+
+            def succ_hi_v(start, v):
+                return jnp.min(jnp.where(sok[v], start[sidx[v]], t_real))
+        else:
+            pred_mask, succ_mask = pred_a, succ_a
+
+            def pred_lo(start):
+                return jnp.max(
+                    jnp.where(pred_mask, (start + dur)[None, :], 0), axis=1)
+
+            def succ_hi(start):
+                return jnp.min(
+                    jnp.where(succ_mask, start[None, :], t_real), axis=1)
+
+            def pred_lo_v(start, v):
+                return jnp.max(jnp.where(pred_mask[v], start + dur, 0))
+
+            def succ_hi_v(start, v):
+                return jnp.min(jnp.where(succ_mask[v], start, t_real))
+
         def round_gains(rem, start):
             # round-start dynamic bounds, as in dyn_bounds_all
-            lo = jnp.max(jnp.where(pred_mask, (start + dur)[None, :], 0),
-                         axis=1)
-            hi = jnp.min(jnp.where(succ_mask, start[None, :], t_real),
-                         axis=1) - dur
+            lo = pred_lo(start)
+            hi = succ_hi(start) - dur
             win_s, win_e = gather_windows(rem.astype(f32), start, dur, mu=mu)
             return gains_from_windows(
                 win_s, win_e, workf, durf,
@@ -155,8 +191,8 @@ def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K):
             e = s + d_v
             # current-state legal bounds (commits earlier in this scan may
             # have moved neighbours), exactly _commit_round's clamp
-            dlo = jnp.max(jnp.where(pred_mask[v], start + dur, 0))
-            dhi = jnp.min(jnp.where(succ_mask[v], start, t_real)) - d_v
+            dlo = pred_lo_v(start, v)
+            dhi = succ_hi_v(start, v) - d_v
             new_s = jnp.clip(s + best_delta[v], dlo, dhi)
             dd = new_s - s
             ln = jnp.minimum(jnp.abs(dd), d_v)
@@ -218,6 +254,41 @@ def _dense_adjacency(inst: Instance, ctx: dict | None):
     return pred, succ
 
 
+def _padded_adjacency(inst: Instance, ctx: dict | None):
+    """Padded-CSR gather tables of the direct G_c edges, cached.
+
+    Returns ``(pidx, pok, sidx, sok)``: int32/bool [N, D] with D the max
+    degree bucketed up to a multiple of 8 (fewer distinct jit shapes
+    across instances). O(N * D) memory — the blocked big-instance twin of
+    :func:`_dense_adjacency`'s O(N^2) masks, cached under its own key so
+    a graph serving both climb forms keeps both."""
+    if ctx is not None and "adj_padded" in ctx:
+        return ctx["adj_padded"]
+    from repro.core.greedy_jax import _bucket_up
+
+    N = inst.num_tasks
+    pdeg = np.diff(inst.pred_ptr)
+    sdeg = np.diff(inst.succ_ptr)
+    D = _bucket_up(max(int(pdeg.max(initial=1)),
+                       int(sdeg.max(initial=1)), 1), 8)
+    pidx = np.zeros((N, D), dtype=np.int32)
+    pok = np.zeros((N, D), dtype=bool)
+    sidx = np.zeros((N, D), dtype=np.int32)
+    sok = np.zeros((N, D), dtype=bool)
+    r = np.repeat(np.arange(N), pdeg)
+    c = np.arange(len(inst.pred_idx)) - np.repeat(inst.pred_ptr[:-1], pdeg)
+    pidx[r, c] = inst.pred_idx
+    pok[r, c] = True
+    r = np.repeat(np.arange(N), sdeg)
+    c = np.arange(len(inst.succ_idx)) - np.repeat(inst.succ_ptr[:-1], sdeg)
+    sidx[r, c] = inst.succ_idx
+    sok[r, c] = True
+    out = (pidx, pok, sidx, sok)
+    if ctx is not None:
+        ctx["adj_padded"] = out
+    return out
+
+
 def local_search_portfolio_multi(inst: Instance, T: int,
                                  unit_budgets: np.ndarray,
                                  starts: np.ndarray, mu: int = 10,
@@ -225,7 +296,8 @@ def local_search_portfolio_multi(inst: Instance, T: int,
                                  interpret: bool | None = None,
                                  ctx: dict | None = None,
                                  polish: bool = True,
-                                 commit_k: int | None = None) -> np.ndarray:
+                                 commit_k: int | None = None,
+                                 adjacency: str | None = None) -> np.ndarray:
     """Hill-climb a batch of schedule rows of one instance at once.
 
     The portfolio engine's climber: rows are any mix of ``-LS`` variants
@@ -246,6 +318,11 @@ def local_search_portfolio_multi(inst: Instance, T: int,
         guarantee — the sequential-reference polish runs regardless — but
         a profile-tuned K can cut device round counts on dense-gain
         instances.
+      adjacency:    ``"dense"`` (None, the default) keeps the O(N^2) bool
+        edge masks on device; ``"padded"`` uses the O(N * D) padded-CSR
+        gather tables instead (:func:`_padded_adjacency`) — bit-identical
+        bounds, the form the blocked-lp big-instance path uses so no
+        dense N x N tensor exists anywhere in the climb.
     Returns:
       int64 [R, N] improved schedules; per-row cost is monotonically
       non-increasing, and no row terminates while a sequential reference
@@ -255,11 +332,13 @@ def local_search_portfolio_multi(inst: Instance, T: int,
 
     from repro.core.greedy_jax import N_BUCKET, T_BUCKET, _bucket_up
 
+    if adjacency not in (None, "dense", "padded"):
+        raise ValueError(f"unknown adjacency form {adjacency!r}")
+    padded = adjacency == "padded"
     starts = np.asarray(starts, dtype=np.int64).copy()
     R, N = starts.shape
     unit_budgets = np.asarray(unit_budgets, dtype=np.int64)
     ctx = ctx if ctx is not None else ls_graph_context(inst)
-    pred, succ = _dense_adjacency(inst, ctx)
 
     rems = unit_budgets - np.stack(
         [work_timeline(inst, T, starts[i]) for i in range(R)])
@@ -280,16 +359,32 @@ def local_search_portfolio_multi(inst: Instance, T: int,
     dur_p[:N] = inst.dur
     work_p = np.zeros(Np, dtype=np.int32)
     work_p[:N] = inst.task_work
-    pred_p = np.zeros((Np, Np), dtype=bool)
-    pred_p[:N, :N] = pred
-    succ_p = np.zeros((Np, Np), dtype=bool)
-    succ_p[:N, :N] = succ
+    if padded:
+        pidx, pok, sidx, sok = _padded_adjacency(inst, ctx)
+        D = pidx.shape[1]
+        pidx_p = np.zeros((Np, D), dtype=np.int32)
+        pidx_p[:N] = pidx
+        pok_p = np.zeros((Np, D), dtype=bool)
+        pok_p[:N] = pok
+        sidx_p = np.zeros((Np, D), dtype=np.int32)
+        sidx_p[:N] = sidx
+        sok_p = np.zeros((Np, D), dtype=bool)
+        sok_p[:N] = sok
+        adj_args = ((jnp.asarray(pidx_p), jnp.asarray(pok_p)),
+                    (jnp.asarray(sidx_p), jnp.asarray(sok_p)))
+    else:
+        pred, succ = _dense_adjacency(inst, ctx)
+        pred_p = np.zeros((Np, Np), dtype=bool)
+        pred_p[:N, :N] = pred
+        succ_p = np.zeros((Np, Np), dtype=bool)
+        succ_p[:N, :N] = succ
+        adj_args = (jnp.asarray(pred_p), jnp.asarray(succ_p))
 
     climbed = np.asarray(_climb_impl(
-        mu, max_rounds, _COMMIT_K if commit_k is None else int(commit_k))(
+        mu, max_rounds, _COMMIT_K if commit_k is None else int(commit_k),
+        padded)(
         jnp.asarray(rem_p), jnp.asarray(start_p), jnp.int32(T),
-        jnp.asarray(dur_p), jnp.asarray(work_p), jnp.asarray(pred_p),
-        jnp.asarray(succ_p)))
+        jnp.asarray(dur_p), jnp.asarray(work_p), *adj_args))
     starts = climbed[:R, :N].astype(np.int64)
 
     if polish:
@@ -311,7 +406,8 @@ def local_search_portfolio(inst: Instance, profile: PowerProfile,
                            interpret: bool | None = None,
                            ctx: dict | None = None,
                            polish: bool = True,
-                           commit_k: int | None = None) -> np.ndarray:
+                           commit_k: int | None = None,
+                           adjacency: str | None = None) -> np.ndarray:
     """Hill-climb a whole portfolio of schedules of one instance at once.
 
     Args:
@@ -330,4 +426,5 @@ def local_search_portfolio(inst: Instance, profile: PowerProfile,
     budgets = np.broadcast_to(unit, (V, profile.T))
     return local_search_portfolio_multi(
         inst, profile.T, budgets, starts, mu=mu, max_rounds=max_rounds,
-        interpret=interpret, ctx=ctx, polish=polish, commit_k=commit_k)
+        interpret=interpret, ctx=ctx, polish=polish, commit_k=commit_k,
+        adjacency=adjacency)

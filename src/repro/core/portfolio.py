@@ -7,8 +7,10 @@ along the profile axis, and this module's layering follows that split:
 * :class:`PreparedGraph` — the profile-INDEPENDENT half, a pure function of
   ``(inst, platform, T, k)``: EST/LST, the four score orders, adjacency
   lists, the graph half of the local-search context, and (lazily) the
-  longest-path matrix + padded device tensors of the jax fan-out. One graph
-  serves every profile sharing the horizon ``T``.
+  longest-path relaxation + padded device tensors of the jax fan-out —
+  the dense matrix when it fits ``lp_budget_bytes``, the streamed
+  ``greedy_jax.BlockedLP`` form past it. One graph serves every profile
+  sharing the horizon ``T``.
 * :class:`ProfileOverlay` — the cheap per-profile remainder: candidate
   masks and the segment skeleton (functions of the profile's interval
   *bounds*, cached on the graph so an ensemble sharing a grid pays them
@@ -90,9 +92,10 @@ class PreparedGraph:
     feasible: bool                    # est0 <= lst0 everywhere
     orders: dict                      # lazy (score, weighted) -> int64 [N]
     adj: tuple                        # (succ_lists, pred_lists)
+    lp_budget_bytes: int | None = None   # None -> greedy_jax.LP_MAX_BYTES
     _ls_graph: dict | None = None     # lazy ls_graph_context()
     _masks: dict = dataclasses.field(default_factory=dict)
-    _lp: np.ndarray | None = None     # lazy longest-path matrix (jax path)
+    _lp: object | None = None         # lazy dense matrix OR BlockedLP
     _shared: tuple | None = None      # lazy padded device tensors
 
     _MASK_CACHE = 8                   # bounds keys kept (FIFO)
@@ -137,11 +140,24 @@ class PreparedGraph:
                 self.platform)
         return self.orders[key]
 
-    def lp(self) -> np.ndarray:
+    def lp(self):
+        """The longest-path relaxation of the jax path: the dense matrix
+        when it fits ``lp_budget_bytes``
+        (:func:`repro.kernels.backend.resolve_lp_form`), else a streamed
+        :class:`repro.core.greedy_jax.BlockedLP` handle — the fan-outs
+        accept either."""
         if self._lp is None:
-            from repro.core.greedy_jax import longest_path_matrix
-            self._lp = longest_path_matrix(self.inst)
+            from repro.core.greedy_jax import lp_for
+            self._lp = lp_for(self.inst, self.lp_budget_bytes)
         return self._lp
+
+    @property
+    def lp_is_blocked(self) -> bool:
+        """Whether the jax path streams this graph's longest paths in
+        blocks (the big-instance form) instead of holding the dense
+        matrix on device."""
+        from repro.core.greedy_jax import BlockedLP
+        return isinstance(self.lp(), BlockedLP)
 
     def shared(self):
         """Bucket-padded device tensors, resident across fan-out calls."""
@@ -176,15 +192,21 @@ class ProfileOverlay:
 
 
 def prepare_graph(inst: Instance, platform: Platform, T: int,
-                  k: int = 3) -> PreparedGraph:
-    """Run the profile-independent precompute once per (instance, horizon)."""
+                  k: int = 3,
+                  lp_budget_bytes: int | None = None) -> PreparedGraph:
+    """Run the profile-independent precompute once per (instance, horizon).
+
+    ``lp_budget_bytes`` bounds the jax path's longest-path memory (None =
+    :data:`repro.core.greedy_jax.LP_MAX_BYTES`); instances whose dense
+    matrix exceeds it stream through the blocked form instead of failing.
+    """
     est0 = compute_est(inst)
     lst0 = compute_lst(inst, T)
     feasible = bool((est0 <= lst0).all())
     return PreparedGraph(
         inst=inst, platform=platform, T=T, k=k,
         est0=est0, lst0=lst0, feasible=feasible, orders={},
-        adj=adjacency_lists(inst))
+        adj=adjacency_lists(inst), lp_budget_bytes=lp_budget_bytes)
 
 
 def overlay_profile(graph: PreparedGraph, profile: PowerProfile,
@@ -301,7 +323,8 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                             validate: bool = True, engine: str = "numpy",
                             graphs=None,
                             commit_k: int | str | None = None,
-                            ls_max_rounds: int = 200
+                            ls_max_rounds: int = 200,
+                            lp_budget_bytes: int | None = None
                             ) -> list[list[dict[str, ScheduleResult]]]:
     """THE (instances x profiles x variants) scheduling pass.
 
@@ -330,6 +353,14 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     :func:`repro.core.local_search_jax.auto_commit_k`), polished to
     sequential-reference local optimality.
 
+    ``lp_budget_bytes`` (None = ``greedy_jax.LP_MAX_BYTES``) bounds the
+    jax engine's per-instance longest-path memory: instances whose dense
+    O(N^2) matrix fits ride the resident fast path; bigger ones stream
+    the blocked form (``greedy_jax.BlockedLP`` fan-out + padded-CSR
+    climb adjacency) bit-identically, so big instances schedule instead
+    of raising ``MemoryError``. Applies to graphs built here — prebuilt
+    ``graphs`` carry their own budget.
+
     In the solver registry (:mod:`repro.core.solvers`) this pass is the
     ``"heuristic"`` backend — one of several solvers behind
     ``PlanRequest(solver=...)``, alongside the exact DP/ILP oracles and
@@ -357,7 +388,8 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     if graphs is None:
         graphs = [None] * I
     graphs = [g if g is not None
-              else prepare_graph(inst, platform, ps[0].T, k=k)
+              else prepare_graph(inst, platform, ps[0].T, k=k,
+                                 lp_budget_bytes=lp_budget_bytes)
               for inst, ps, g in zip(instances, profile_grid, graphs)]
     need = _needed_combos(names)
     # overlays only precompute the interval subdivisions the requested
@@ -431,13 +463,15 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                  for p in range(P) for v in keys])
             row_budgets = np.stack([overlays[i][p].unit_budget
                                     for p in range(P) for _ in keys])
-            # ctx = the graph dict, so the dense-adjacency cache of the
-            # device climb survives across profiles (the overlay's ls dict
-            # is a per-profile copy)
+            # ctx = the graph dict, so the adjacency cache of the device
+            # climb survives across profiles (the overlay's ls dict is a
+            # per-profile copy); blocked-lp instances use the padded-CSR
+            # adjacency so the climb holds no dense N x N tensor either
             improved = local_search_portfolio_multi(
                 instances[i], graphs[i].T, row_budgets, rows, mu=mu,
                 max_rounds=ls_max_rounds, ctx=graphs[i].ls_graph,
-                commit_k=ck)
+                commit_k=ck,
+                adjacency="padded" if graphs[i].lp_is_blocked else "dense")
             dt = (time.perf_counter() - t0) / len(rows)
             for p in range(P):
                 ls_dones[i][p] = {n: (improved[p * len(keys) + j], dt)
@@ -577,6 +611,11 @@ def portfolio_starts_batch(preps: list[PreparedInstance],
         for i in idx:
             p = preps[i]
             dur, work, lp, est_j, lst_j, tail = p.graph.shared()
+            if p.graph.lp_is_blocked:
+                raise TypeError(
+                    "portfolio_starts_batch batches dense-lp instances "
+                    "only; blocked-lp (big) instances go through "
+                    "greedy_fanout_grid_jax / schedule_portfolio_grid")
             masks = pad_masks(np.stack(
                 [p.masks[r] for (_, _, r) in combos]), Tp)
             orders = pad_orders(np.stack(

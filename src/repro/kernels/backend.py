@@ -50,6 +50,26 @@ def resolve_solver(solver: str | None):
     return get_solver("heuristic" if solver in (None, "auto") else solver)
 
 
+def resolve_lp_form(num_tasks: int, budget_bytes: int | None = None) -> str:
+    """Longest-path representation for the jax engine: ``"dense"`` or
+    ``"blocked"``.
+
+    THE dense-vs-blocked decision rule, shared by
+    :meth:`repro.core.portfolio.PreparedGraph.lp` and
+    :func:`repro.core.greedy_jax.lp_for`: the O(N^2) int32 matrix when it
+    fits ``budget_bytes`` (default
+    :data:`repro.core.greedy_jax.LP_MAX_BYTES`) — the fast path, resident
+    on device — and the O(N * B) streamed
+    :class:`repro.core.greedy_jax.BlockedLP` form past it. Centralized
+    here next to :func:`resolve_engine`/:func:`resolve_mode` so no two
+    call sites can disagree on where the envelope sits.
+    """
+    from repro.core.greedy_jax import LP_MAX_BYTES, lp_matrix_bytes
+
+    limit = LP_MAX_BYTES if budget_bytes is None else int(budget_bytes)
+    return "dense" if lp_matrix_bytes(num_tasks) <= limit else "blocked"
+
+
 def resolve_engine(engine: str | None, fanout: int = 1) -> str:
     """Resolve a scheduling-engine request to ``"numpy"`` or ``"jax"``.
 

@@ -267,7 +267,7 @@ def test_lp_matrix_memory_guard():
     _, inst, _ = _multiproc(seed=3)
     lp = longest_path_matrix(inst)                  # small N: fine
     assert lp.shape == (inst.num_tasks, inst.num_tasks)
-    with pytest.raises(MemoryError, match="blocked / sparse-reachability"):
+    with pytest.raises(MemoryError, match="blocked form"):
         longest_path_matrix(inst, max_bytes=8)
     (lp2,) = [longest_path_matrix(inst, max_bytes=lp_matrix_bytes(
         inst.num_tasks))]                           # exact budget passes
