@@ -7,8 +7,8 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-device test-host test-exact test-big bench bench-smoke \
-	planner-smoke verify
+.PHONY: test test-device test-host test-exact test-big test-chaos bench \
+	bench-smoke planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -30,6 +30,11 @@ test-exact:
 test-big:
 	$(PY) -m pytest -x -q -m big
 
+# chaos drills: scripted fault injection against the PlanService
+# degradation ladder (deselected from tier-1; deterministic per seed)
+test-chaos:
+	$(PY) -m pytest -x -q -m chaos
+
 bench:
 	$(PY) -m benchmarks.run --only portfolio
 
@@ -40,5 +45,6 @@ planner-smoke:
 	$(PY) -c "from repro.api import LocalSearchConfig, Planner, \
 	PlanRequest, PlanResult, PlanningSession; print('planner api: ok')"
 
-# the PR gate: tier-1 tests + Planner import smoke + tier-2 bench refresh
-verify: test planner-smoke bench-smoke
+# the PR gate: tier-1 tests + chaos drills + Planner import smoke +
+# tier-2 bench refresh
+verify: test test-chaos planner-smoke bench-smoke

@@ -25,6 +25,10 @@ Emits ``benchmarks/out/BENCH_portfolio.json``:
     multiprocessor DAG) on small instances, so the perf trajectory also
     tracks solution quality (a speedup that silently costs optimality
     shows up here);
+  * ``service`` — serving-tier telemetry: a coalesced burst, forced
+    degradations, and structured rejections through ``PlanService``,
+    reported as queue depth, coalesce ratio, p50/p99 plan latency, and
+    degradation counts;
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -240,6 +244,60 @@ def _lp_blocked_section(cases) -> dict:
     }
 
 
+def _service_section(cases) -> dict:
+    """Serving-tier telemetry on a representative burst: a coalesced
+    same-key burst (one combined launch serves every caller), two
+    zero-budget requests that degrade down the ladder to ``asap``, one
+    malformed request rejected at admission, and one load-shed
+    :class:`~repro.serve.service.Overloaded` rejection — then the
+    :meth:`PlanService.stats` snapshot (queue depth, coalesce ratio,
+    p50/p99 plan latency, degradation counts) becomes the payload."""
+    from repro.api import Planner, PlanRequest
+    from repro.serve import InvalidRequest, Overloaded, PlanService
+
+    c = cases[0]
+    burst = 6
+    planner = Planner(c.platform, engine="numpy")
+    req = PlanRequest(instances=c.inst, profiles=c.profile)
+    with PlanService(planner, max_queue=burst + 2) as svc:
+        svc.pause()                      # let the burst pile up: coalesce
+        tickets = [svc.submit(req) for _ in range(burst)]
+        svc.resume()
+        for t in tickets:
+            t.result(timeout=600)
+        degraded = [svc.plan(req, budget=0.0) for _ in range(2)]
+        try:                             # malformed: structured rejection
+            svc.submit(PlanRequest(instances=c.inst, profiles=[]))
+        except InvalidRequest:
+            pass
+        svc.pause()                      # overload: fill the queue, shed
+        filler = []
+        try:
+            for _ in range(svc.max_queue + 1):
+                filler.append(svc.submit(req))
+        except Overloaded:
+            pass
+        svc.resume()
+        for t in filler:
+            t.result(timeout=600)
+        stats = svc.stats()
+    assert all(d.degraded and d.fallback_stage == "asap" for d in degraded)
+    return {
+        "case": c.name,
+        "burst": burst,
+        "batches": stats["batches"],
+        "coalesce_ratio": stats["coalesce_ratio"],
+        "max_queue_depth": stats["max_queue_depth"],
+        "completed": stats["completed"],
+        "degraded": stats["degraded"],
+        "rejected_invalid": stats["rejected_invalid"],
+        "rejected_overloaded": stats["rejected_overloaded"],
+        "stages": stats["stages"],
+        "latency_p50_ms": stats["latency"]["p50_ms"],
+        "latency_p99_ms": stats["latency"]["p99_ms"],
+    }
+
+
 def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         with_jax: bool = True, n_profiles: int = 8,
         gap_time_limit: float = 20.0):
@@ -383,6 +441,8 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
 
     lp_blocked = _lp_blocked_section(cases) if with_jax else None
 
+    service = _service_section(cases)
+
     gaps = _gap_table(gap_time_limit)
 
     n = len(cases)
@@ -405,6 +465,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         "multi_profile": multi,
         "planner": planner_stats,
         "lp_blocked": lp_blocked,
+        "service": service,
         "gaps": gaps,
         "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
@@ -434,6 +495,11 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
              f";over_envelope_n={ov['n_tasks']}"
              f";dense_raises={ov['dense_raises']}"
              f";steady_misses={lp_blocked['jit_cache_misses_steady']}")
+    emit("planner_service", service["latency_p50_ms"] * 1e3,
+         f"coalesce={service['coalesce_ratio']:.1f}x"
+         f";p99_ms={service['latency_p99_ms']:.1f}"
+         f";degraded={service['degraded']}/{service['completed']}"
+         f";shed={service['rejected_overloaded']}")
     for gc in gaps["cases"]:
         asap_s = ("n/a" if gc["gap_asap"] is None
                   else f"{gc['gap_asap']:.3f}")

@@ -22,7 +22,7 @@ from repro.configs import ARCHS, reduced
 from repro.core import generate_profile
 from repro.core.dag import build_instance
 from repro.models import build_model, param_count
-from repro.serve import ContinuousBatcher, Request
+from repro.serve import ContinuousBatcher, PlanService, Request
 
 
 def carbon_admission_plan(n_requests: int, slots: int, est_chunk_s: int = 5):
@@ -39,13 +39,20 @@ def carbon_admission_plan(n_requests: int, slots: int, est_chunk_s: int = 5):
     horizon = 3 * n_chunks * est_chunk_s
     profile = generate_profile("S1", horizon, plat, J=12, seed=4,
                                work_capacity=int(plat.p_work[0]))
-    res = Planner(plat).plan(PlanRequest(
-        instances=inst, profiles=profile, variants=("asap", "pressWR-LS")))
-    plan = res.result(variant="pressWR-LS")
+    # plan through the resilient serving tier: a blown budget degrades to
+    # a feasible asap plan instead of failing admission
+    with PlanService(Planner(plat), default_budget=10.0) as svc:
+        res = svc.plan(PlanRequest(
+            instances=inst, profiles=profile,
+            variants=("asap", "pressWR-LS")))
+    plan = res.result(variant="pressWR-LS" if "pressWR-LS" in res.variants
+                      else res.variants[-1])
     asap = res.result(variant="asap")
+    state = (f"degraded to {res.fallback_stage}" if res.degraded
+             else "full fidelity")
     print(f"carbon admission plan: {n_chunks} decode chunks, carbon "
           f"{plan.cost} vs ASAP {asap.cost} "
-          f"({plan.cost / max(asap.cost, 1):.2f}x); chunk starts "
+          f"({plan.cost / max(asap.cost, 1):.2f}x, {state}); chunk starts "
           f"{[int(s) for s in plan.start[:8]]}"
           f"{'...' if len(plan.start) > 8 else ''} (simulated)")
 

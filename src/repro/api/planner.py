@@ -30,6 +30,7 @@ heuristics-vs-baseline-vs-exact evaluation in three ``plan()`` calls and
 from __future__ import annotations
 
 import collections
+import threading
 import time
 
 import numpy as np
@@ -79,16 +80,38 @@ class Planner:
         self._graph_cache = int(graph_cache)
         self._graphs: collections.OrderedDict[tuple, PreparedGraph] = \
             collections.OrderedDict()
+        # the graph cache is shared mutable state: the serving tier
+        # (repro.serve.service) hits one Planner from a worker plus
+        # watchdog-abandoned solve threads, so cache mutation is locked
+        # (planning itself is outside the lock — only the bookkeeping is)
+        self._cache_lock = threading.Lock()
+
+    def clone(self, *, engine: str | None = None,
+              lp_budget_bytes: int | None = None) -> "Planner":
+        """A planner with this one's configuration but its own caches.
+
+        The serving tier uses clones to pin the engine per coalesced
+        batch (so coalescing can never flip a request's ``auto``
+        resolution) and to retry device OOMs under a reduced blocked-LP
+        budget without disturbing the shared planner.
+        """
+        return Planner(self.platform,
+                       engine=self.engine if engine is None else engine,
+                       k=self.k, ls=self.ls, validate=self.validate,
+                       graph_cache=self._graph_cache,
+                       lp_budget_bytes=self.lp_budget_bytes
+                       if lp_budget_bytes is None else lp_budget_bytes)
 
     # --- PreparedGraph cache ---------------------------------------------
 
     def prepared(self, inst, T: int) -> PreparedGraph:
         """The cached profile-independent precompute of ``(inst, T)``."""
         key = (id(inst), int(T), self.k)
-        g = self._graphs.get(key)
-        if g is not None and g.inst is inst:
-            self._graphs.move_to_end(key)
-            return g
+        with self._cache_lock:
+            g = self._graphs.get(key)
+            if g is not None and g.inst is inst:
+                self._graphs.move_to_end(key)
+                return g
         g = prepare_graph(inst, self.platform, int(T), k=self.k,
                           lp_budget_bytes=self.lp_budget_bytes)
         self.seed_graph(g)
@@ -97,10 +120,11 @@ class Planner:
     def seed_graph(self, graph: PreparedGraph) -> None:
         """Adopt an externally prepared graph (legacy ``prep=``/``graph=``
         reuse); it must match this planner's platform and k."""
-        cap = max(self._graph_cache, 1)     # always hold the current graph
-        while self._graphs and len(self._graphs) >= cap:
-            self._graphs.popitem(last=False)
-        self._graphs[(id(graph.inst), graph.T, graph.k)] = graph
+        with self._cache_lock:
+            cap = max(self._graph_cache, 1)  # always hold the current graph
+            while self._graphs and len(self._graphs) >= cap:
+                self._graphs.popitem(last=False)
+            self._graphs[(id(graph.inst), graph.T, graph.k)] = graph
 
     # --- planning --------------------------------------------------------
 
@@ -142,7 +166,8 @@ class Planner:
                           engine=engine,
                           seconds=time.perf_counter() - t0,
                           robust_requested=bool(request.robust),
-                          solver=solver.name, lower_bound=out.lower)
+                          solver=solver.name, lower_bound=out.lower,
+                          mip_gap=out.mip_gap)
 
     def session(self, instances, window_profiles, **kw):
         """An async rolling-horizon :class:`~repro.api.session

@@ -94,6 +94,51 @@ def window_profile(profile: PowerProfile, t0: int, T: int) -> PowerProfile:
                         scenario=profile.scenario)
 
 
+def validate_resolved(instances, grid) -> None:
+    """Structural sanity of a resolved (instances x profiles) grid.
+
+    The serving tier's quarantine check (:class:`~repro.serve.service
+    .PlanService`): a corrupt instance or profile must be rejected with a
+    precise, per-cell error *before* it reaches the shared
+    ``PreparedGraph`` cache or the coalesced batch it rode in on.
+    Checks, per instance: CSR adjacency indices in range, positive
+    durations; per (instance, profile) cell: monotone bounds starting at
+    0, ``len(budget) == len(bounds) - 1``, and a horizon long enough for
+    the instance's critical path (otherwise no feasible schedule exists
+    and every solver would fail downstream with a far worse message).
+    Raises :class:`ValueError` naming the failing cell.
+    """
+    from repro.core.estlst import compute_est
+
+    for i, (inst, ps) in enumerate(zip(instances, grid)):
+        n = inst.num_tasks
+        for name, idx in (("succ", inst.succ_idx), ("pred", inst.pred_idx)):
+            if len(idx) and (idx.min() < 0 or idx.max() >= n):
+                raise ValueError(
+                    f"instance {i} ({inst.name!r}): {name} adjacency "
+                    f"index outside [0, {n})")
+        if (inst.dur < 1).any():
+            raise ValueError(
+                f"instance {i} ({inst.name!r}): non-positive duration")
+        need = int((compute_est(inst) + inst.dur).max()) if n else 0
+        for p, prof in enumerate(ps):
+            b = np.asarray(prof.bounds)
+            g = np.asarray(prof.budget)
+            if b.ndim != 1 or len(b) < 2 or int(b[0]) != 0 \
+                    or (np.diff(b) <= 0).any():
+                raise ValueError(
+                    f"cell ({i}, {p}): malformed profile bounds "
+                    f"(need 0 = b[0] < ... < b[J] = T)")
+            if g.ndim != 1 or len(g) != len(b) - 1:
+                raise ValueError(
+                    f"cell ({i}, {p}): profile budget length {len(g)} != "
+                    f"{len(b) - 1} intervals")
+            if prof.T < need:
+                raise ValueError(
+                    f"cell ({i}, {p}): horizon {prof.T} is shorter than "
+                    f"the instance's critical path {need} (infeasible)")
+
+
 def _as_instances(instances) -> list[Instance]:
     if isinstance(instances, Instance):
         return [instances]

@@ -31,7 +31,19 @@ class PlanResult:
     (:mod:`repro.core.solvers`); exact solvers fill ``lower_bound`` with
     a valid per-cell bound on the optimal cost (``lower_bound == cost``
     certifies a proven optimum), which :meth:`gap` and :meth:`compare`
-    consume to report heuristic-vs-optimal quality.
+    consume to report heuristic-vs-optimal quality. ``mip_gap`` is the
+    MILP backend's relative per-cell gap (0.0 proven, >0 on time-limit
+    exits, NaN unknown) — present only on ilp/exact results.
+
+    Results served by :class:`~repro.serve.service.PlanService` also
+    carry the degradation record: ``degraded`` flags that the service
+    could not deliver the request's own solver at full fidelity within
+    its deadline budget, ``fallback_stage`` names the chain stage that
+    produced the plan (``"exact" -> "ilp" -> "heuristic" -> "asap"``),
+    and ``attempts`` logs every stage outcome the watchdog walked
+    (``"exact:crash"``, ``"ilp:timeout"``, ``"heuristic:ok"`` ...).
+    Plans straight from :meth:`Planner.plan` leave all three at their
+    defaults.
     """
 
     variants: tuple[str, ...]
@@ -42,6 +54,10 @@ class PlanResult:
     robust_requested: bool = False
     solver: str = "heuristic"
     lower_bound: np.ndarray | None = None   # int64 [I, P] (exact solvers)
+    mip_gap: np.ndarray | None = None       # float [I, P] (ilp/exact)
+    degraded: bool = False                  # service fallback record
+    fallback_stage: str | None = None
+    attempts: tuple[str, ...] = ()
 
     @property
     def shape(self) -> tuple[int, int, int]:

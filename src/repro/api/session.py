@@ -69,6 +69,7 @@ class PlanningSession:
         self._pool = _fut.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="planning-session")
         self._plans: dict[int, _fut.Future] = {}
+        self._retried: set[int] = set()
         self._closed = False
 
     def request_for(self, window: int) -> PlanRequest:
@@ -87,7 +88,13 @@ class PlanningSession:
         """Window ``window``'s :class:`PlanResult`; blocks only when its
         background plan has not finished. Prefetches the next
         ``lookahead`` windows before blocking, so planning overlaps the
-        caller's execution of the current window."""
+        caller's execution of the current window.
+
+        A failed background plan is NOT cached forever: its future is
+        evicted and the window resubmitted once (a transient failure —
+        a device hiccup, an injected fault — heals on retry); only a
+        second failure propagates, and later calls re-raise it instead
+        of looping."""
         if self._closed:
             raise RuntimeError("planning session is closed")
         if not 0 <= window < self.n_windows:
@@ -96,7 +103,17 @@ class PlanningSession:
         self._submit(window)
         for nxt in range(window + 1, window + 1 + self.lookahead):
             self._submit(nxt)
-        return self._plans[window].result()
+        try:
+            return self._plans[window].result()
+        except _fut.CancelledError:
+            raise RuntimeError("planning session is closed") from None
+        except Exception:
+            if window in self._retried or self._closed:
+                raise
+            self._retried.add(window)
+            del self._plans[window]
+            self._submit(window)
+            return self._plans[window].result()
 
     def windows(self):
         """Iterate ``(window, PlanResult)`` over the whole session."""
@@ -104,8 +121,12 @@ class PlanningSession:
             yield k, self.plan_for(k)
 
     def close(self) -> None:
+        """Close the session without draining the lookahead: queued
+        prefetch plans are cancelled (``cancel_futures``), so closing
+        mid-run returns as soon as the one in-flight plan (if any)
+        finishes instead of planning every prefetched window first."""
         self._closed = True
-        self._pool.shutdown(wait=True)
+        self._pool.shutdown(wait=True, cancel_futures=True)
 
     def __enter__(self):
         return self

@@ -56,10 +56,15 @@ class SolveOutput:
     ``lower[i, p]`` is a valid int64 lower bound on cell (i, p)'s optimal
     cost, or ``None`` for solvers that cannot certify one (heuristic,
     asap). ``lower == cost`` certifies a proven optimum for that cell.
+    ``mip_gap[i, p]`` is the relative optimality gap the MILP backend
+    reported for the cell (0.0 at a proven optimum, >0 on a time-limit /
+    mip-gap exit, NaN where the sub-solver reports none) — the bound
+    certificate a degraded-but-not-failed exact solve carries.
     """
 
     cells: list                        # I x P of {variant: ScheduleResult}
     lower: np.ndarray | None = None    # int64 [I, P] or None
+    mip_gap: np.ndarray | None = None  # float [I, P] or None (ilp/exact)
 
 
 class Solver:
@@ -94,18 +99,21 @@ class Solver:
 
     def _solve_cells(self, instances, profile_grid, names, validate,
                      cell_fn) -> SolveOutput:
-        """Run ``cell_fn(i, inst, profile) -> (start, lower|None)`` over
-        the grid and assemble the common single-column output shape."""
+        """Run ``cell_fn(i, inst, profile) -> (start, lower|None[, gap])``
+        over the grid and assemble the common single-column output shape."""
         label = _single_label(names, self)
         I, P = len(instances), len(profile_grid[0]) if instances else 0
         lower = np.zeros((I, P), dtype=np.int64)
-        any_lower = False
+        gaps = np.full((I, P), np.nan)
+        any_lower = any_gap = False
         cells = []
         for i, inst in enumerate(instances):
             row = []
             for p, profile in enumerate(profile_grid[i]):
                 t0 = time.perf_counter()
-                start, lb = cell_fn(i, inst, profile)
+                out = cell_fn(i, inst, profile)
+                start, lb = out[0], out[1]
+                gap = out[2] if len(out) > 2 else None
                 secs = time.perf_counter() - t0
                 start = np.asarray(start, dtype=np.int64)
                 if validate:
@@ -114,11 +122,15 @@ class Solver:
                 if lb is not None:
                     lower[i, p] = min(int(lb), cost)
                     any_lower = True
+                if gap is not None and np.isfinite(gap):
+                    gaps[i, p] = float(gap)
+                    any_gap = True
                 row.append({label: ScheduleResult(
                     variant=label, start=start, cost=cost, seconds=secs)})
             cells.append(row)
         return SolveOutput(cells=cells,
-                           lower=lower if any_lower else None)
+                           lower=lower if any_lower else None,
+                           mip_gap=gaps if any_gap else None)
 
 
 def _single_label(names, solver: Solver) -> str:
@@ -223,18 +235,23 @@ class DpUniprocSolver(Solver):
 class IlpSolver(Solver):
     """The time-indexed HiGHS MILP (paper §4.3), one solve per cell.
 
-    ``options``: ``time_limit`` (seconds, default 300) and ``mip_gap``
-    (relative, default 0) plumb straight into HiGHS. The reported cost is
+    ``options``: ``time_limit`` (seconds, default
+    :data:`IlpSolver.DEFAULT_TIME_LIMIT`) and ``mip_gap`` (relative,
+    default 0) plumb straight into HiGHS. The reported cost is
     the exact integer cost of the incumbent schedule; the per-cell lower
     bound is the HiGHS dual bound (rounded up — costs are integral), so a
     time-limited solve still yields a certified gap, and ``lower == cost``
-    certifies optimality. Paper's own scope note applies: exact solves
-    are only run on small instances.
+    certifies optimality. A time-limit exit WITH an incumbent is a
+    degraded success, not a failure: the cell's ``mip_gap`` carries the
+    HiGHS relative gap so the serving tier can flag the result degraded
+    while still returning the schedule + bound certificate. Paper's own
+    scope note applies: exact solves are only run on small instances.
     """
 
     name = "ilp"
     exact = True
     uses_graphs = False
+    DEFAULT_TIME_LIMIT = 300.0
 
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
@@ -243,7 +260,7 @@ class IlpSolver(Solver):
         from repro.core.ilp import solve_ilp    # lazy: needs scipy/HiGHS
 
         opts = options or {}
-        time_limit = float(opts.get("time_limit", 300.0))
+        time_limit = float(opts.get("time_limit", self.DEFAULT_TIME_LIMIT))
         mip_gap = float(opts.get("mip_gap", 0.0))
 
         def cell(i, inst, profile):
@@ -261,8 +278,13 @@ class IlpSolver(Solver):
                 # (never falsely reports lower == cost on an unproven
                 # incumbent)
                 lb = res.cost if res.status == 0 else 0.0
+            gap = res.mip_gap
+            if not np.isfinite(gap):
+                # a proven optimum has zero gap even when HiGHS omits the
+                # field; an unproven incumbent keeps NaN (gap unknown)
+                gap = 0.0 if res.status == 0 else float("nan")
             # integral costs: round the continuous dual bound up
-            return res.start, int(np.ceil(lb - 1e-6))
+            return res.start, int(np.ceil(lb - 1e-6)), gap
 
         return self._solve_cells(instances, profile_grid, names, validate,
                                  cell)
@@ -290,6 +312,8 @@ class ExactSolver(Solver):
         P = len(profile_grid[0]) if instances else 0
         cells: list = [None] * I
         lower = np.zeros((I, P), dtype=np.int64)
+        gaps = np.full((I, P), np.nan)
+        any_gap = False
         for i, inst in enumerate(instances):
             sub = DP if is_uniprocessor(inst) else ILP
             out = sub.solve_grid(
@@ -300,7 +324,11 @@ class ExactSolver(Solver):
                 options=options)
             cells[i] = out.cells[0]
             lower[i] = out.lower[0]
-        return SolveOutput(cells=cells, lower=lower)
+            if out.mip_gap is not None:
+                gaps[i] = out.mip_gap[0]
+                any_gap = True
+        return SolveOutput(cells=cells, lower=lower,
+                           mip_gap=gaps if any_gap else None)
 
 
 # ---------------------------------------------------------------------------

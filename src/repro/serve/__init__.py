@@ -1,1 +1,11 @@
 from repro.serve.batching import ContinuousBatcher, Request  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    FALLBACK_CHAINS,
+    InvalidRequest,
+    Overloaded,
+    PlanFailure,
+    PlanService,
+    ServiceClosed,
+    ServiceError,
+    Ticket,
+)

@@ -1,0 +1,556 @@
+"""Resilient always-on planning service over a shared :class:`Planner`.
+
+The ROADMAP's serving-tier robustness slice: the `Planner`/`PlanningSession`
+stack is one-process, one-caller, and a single solver exception, device
+``MemoryError``, or ILP overrun takes the whole call down. The paper's own
+structure provides a graceful-degradation ladder — the certified exact
+oracles, the 17-variant heuristic portfolio, and the §5.1 ``asap``
+baseline all serve the same ``(instances x profiles)`` grid shape — so a
+serving tier can *always* emit some feasible schedule before the deadline.
+:class:`PlanService` wires that ladder behind a bounded admission queue:
+
+* **Admission + coalescing** — :meth:`PlanService.submit` validates the
+  request, rejects with a structured :class:`Overloaded` error when the
+  queue is full, and enqueues a :class:`Ticket`. A single worker drains
+  the queue and coalesces compatible tickets (same solver, engine,
+  variant tuple, profile count, robust mode) into shape-bucket batches:
+  one combined-grid ``Planner.plan`` launch serves many callers, and the
+  per-cell results are bit-identical to solo plans (the combined-grid
+  property the Planner API ships with), so coalescing is invisible to
+  callers — fault-free service results equal direct ``Planner.plan``.
+
+* **Deadline budgets + fallback chain** — every ticket carries a
+  wall-clock budget; a watchdog bounds each chain-stage solve by the
+  minimum remaining budget in the batch and, on timeout or failure,
+  walks ``exact -> ilp (time-limited) -> heuristic -> asap``. ILP stages
+  get a default ``time_limit`` clamped to the remaining budget, and a
+  time-limit exit with an incumbent is a *degraded success*: the
+  schedule ships with its HiGHS ``lower_bound``/``mip_gap`` certificate.
+  The terminal ``asap`` stage runs untimed (it is O(N + E)), so even a
+  blown budget still yields a feasible schedule. Results record
+  ``degraded``, ``fallback_stage``, and the full ``attempts`` log on the
+  :class:`~repro.api.result.PlanResult`.
+
+* **Retry + blocked-LP recovery** — transient failures
+  (:class:`~repro.runtime.fault.SimulatedFailure`) retry with
+  exponential backoff; a device ``MemoryError`` (the dense
+  ``longest_path_matrix`` envelope, or an injected OOM) retries once on
+  a planner clone with a reduced ``lp_budget_bytes`` so the blocked
+  longest-path form serves the request instead.
+
+* **Validation + quarantine** — malformed instances/profiles are
+  rejected at admission (:func:`repro.api.request.validate_resolved`)
+  or, if corruption appears later, quarantined at batch assembly with a
+  structured :class:`InvalidRequest`; a batch-mate's poison never
+  reaches the shared ``PreparedGraph`` cache or fails the batch. If a
+  combined solve still dies on an unexpected error, the batch is
+  bisected: every ticket re-runs its chain in isolation, so exactly the
+  poisoned ticket fails.
+
+* **Fault seam + telemetry** — a
+  :class:`~repro.runtime.fault.ServiceFaultInjector` can be plugged in
+  to fire deterministic solver crashes, hangs, device OOMs, and profile
+  corruption inside the real code paths (the chaos suite drives every
+  ladder rung end-to-end); :meth:`PlanService.stats` reports queue
+  depth, coalesce ratio, p50/p99 plan latency, and degradation counts.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures as _fut
+import threading
+import time
+
+import numpy as np
+
+from repro.api.planner import Planner
+from repro.api.request import PlanRequest, validate_resolved
+from repro.api.result import PlanResult
+from repro.kernels.backend import resolve_engine
+from repro.runtime.fault import SimulatedFailure, corrupt_profile
+
+# The graceful-degradation ladder, per requested solver: every stage
+# serves the same (instances x profiles) grid, each rung cheaper and more
+# robust than the one above it; "asap" (O(N + E), no solver machinery)
+# terminates every chain.
+FALLBACK_CHAINS: dict[str, tuple[str, ...]] = {
+    "exact": ("exact", "ilp", "heuristic", "asap"),
+    "ilp": ("ilp", "heuristic", "asap"),
+    "dp": ("dp", "heuristic", "asap"),
+    "heuristic": ("heuristic", "asap"),
+    "asap": ("asap",),
+}
+
+
+class ServiceError(RuntimeError):
+    """Structured service rejection: ``code`` + machine-readable details.
+
+    ``to_dict()`` is the wire shape (what an RPC layer would serialize);
+    the message stays human-readable.
+    """
+
+    code = "error"
+
+    def __init__(self, message: str, **details):
+        super().__init__(message)
+        self.details = details
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "message": str(self), **self.details}
+
+
+class Overloaded(ServiceError):
+    """Admission queue full — retry later / shed load upstream."""
+
+    code = "overloaded"
+
+
+class InvalidRequest(ServiceError):
+    """Malformed instance/profile — rejected before touching shared
+    state; never retried."""
+
+    code = "invalid_request"
+
+
+class PlanFailure(ServiceError):
+    """Every chain stage failed (the request is poisoned or the service
+    is badly degraded); ``details["attempts"]`` records the walk."""
+
+    code = "plan_failure"
+
+
+class ServiceClosed(ServiceError):
+    """The service shut down before this ticket was served."""
+
+    code = "closed"
+
+
+class Ticket:
+    """One admitted request: a future plus its admission metadata."""
+
+    def __init__(self, request: PlanRequest, instances, grid, names,
+                 engine: str, budget: float | None):
+        self.request = request
+        self.instances = instances            # resolved (crop applied)
+        self.grid = grid
+        self.names = names
+        self.engine = engine
+        self.solver = request.solver if request.solver else "heuristic"
+        self.robust = bool(request.robust)
+        self.options = request.solver_options
+        self.admitted = time.monotonic()
+        self.deadline = None if budget is None else self.admitted + budget
+        self._fut: _fut.Future = _fut.Future()
+
+    @property
+    def cells(self) -> int:
+        return len(self.instances) * len(self.grid[0])
+
+    def remaining(self) -> float | None:
+        """Seconds left in this ticket's deadline budget (None = unbounded)."""
+        return None if self.deadline is None \
+            else self.deadline - time.monotonic()
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: float | None = None) -> PlanResult:
+        """Block for the plan; raises the structured :class:`ServiceError`
+        subclass on rejection/failure."""
+        return self._fut.result(timeout)
+
+    def _coalesce_key(self):
+        try:
+            opts = tuple(sorted((self.options or {}).items()))
+        except TypeError:                      # unhashable option values:
+            opts = object()                    # unique key, no coalescing
+        return (self.solver, self.engine, self.names, len(self.grid[0]),
+                self.robust, opts)
+
+
+class PlanService:
+    """A long-lived, fault-tolerant planning frontend over one
+    :class:`~repro.api.planner.Planner`.
+
+    Args:
+      planner: the shared facade; the service clones it per resolved
+        engine (so coalescing never flips an ``auto`` resolution) and for
+        the reduced-budget blocked-LP retry. Its platform/k/ls/validate
+        configuration applies to every clone.
+      max_queue: admission bound — ``submit`` raises :class:`Overloaded`
+        when this many tickets are already waiting.
+      max_batch: coalescing bound — at most this many tickets share one
+        combined-grid launch.
+      default_budget: seconds of wall-clock deadline budget a ticket gets
+        when ``submit`` does not specify one (None = unbounded).
+      retries / backoff: transient-failure policy per chain stage
+        (exponential: ``backoff * 2**attempt`` seconds between tries).
+      ilp_time_limit: default HiGHS time limit (seconds) for ``ilp`` /
+        ``exact`` chain stages reached through the service — clamped to
+        the remaining deadline budget; an explicit
+        ``solver_options["time_limit"]`` on the request wins.
+      lp_retry_budget_bytes: the reduced ``lp_budget_bytes`` used for the
+        one blocked-LP retry after a device ``MemoryError``.
+      fallback_variants: the (cheap) heuristic column set used when an
+        exact chain degrades INTO the heuristic stage; heuristic-first
+        requests keep their own variants.
+      injector: optional :class:`~repro.runtime.fault
+        .ServiceFaultInjector` — the chaos seam.
+    """
+
+    def __init__(self, planner: Planner, *, max_queue: int = 64,
+                 max_batch: int = 8, default_budget: float | None = None,
+                 retries: int = 2, backoff: float = 0.02,
+                 ilp_time_limit: float = 30.0,
+                 lp_retry_budget_bytes: int = 8 * 2**20,
+                 fallback_variants: tuple[str, ...] = ("asap", "pressWR-LS"),
+                 injector=None):
+        self._base = planner
+        self.max_queue = int(max_queue)
+        self.max_batch = max(int(max_batch), 1)
+        self.default_budget = default_budget
+        self.retries = max(int(retries), 0)
+        self.backoff = float(backoff)
+        self.ilp_time_limit = float(ilp_time_limit)
+        self.lp_retry_budget_bytes = int(lp_retry_budget_bytes)
+        self.fallback_variants = tuple(fallback_variants)
+        self.injector = injector
+        self._planners: dict[tuple[str, bool], Planner] = {}
+        self._cond = threading.Condition()
+        self._queue: collections.deque[Ticket] = collections.deque()
+        self._paused = False
+        self._closed = False
+        self._counts = collections.Counter()
+        self._stage_counts = collections.Counter()
+        self._latencies: collections.deque[float] = \
+            collections.deque(maxlen=1024)
+        self._stats_lock = threading.Lock()
+        # abandoned (watchdog-timed-out) solves keep their worker until
+        # they return; a few spare workers keep the chain walking
+        self._solve_pool = _fut.ThreadPoolExecutor(
+            max_workers=8, thread_name_prefix="plan-service-solve")
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="plan-service")
+        self._worker.start()
+
+    # --- admission --------------------------------------------------------
+
+    def submit(self, request: PlanRequest, budget: float | None = None
+               ) -> Ticket:
+        """Admit one request; returns a :class:`Ticket` immediately.
+
+        Raises :class:`InvalidRequest` (malformed request — structured,
+        synchronous, nothing shared was touched), :class:`Overloaded`
+        (queue full), or :class:`ServiceClosed`.
+        """
+        if self._closed:
+            raise ServiceClosed("plan service is closed")
+        try:
+            instances, grid, names = request.resolve()
+            validate_resolved(instances, grid)
+        except (ValueError, TypeError) as e:
+            self._bump(rejected_invalid=1)
+            raise InvalidRequest(f"rejected at admission: {e}",
+                                 reason=str(e)) from e
+        solver = request.solver if request.solver else "heuristic"
+        engine = resolve_engine(
+            self._base.engine, fanout=len(instances) * len(grid[0])) \
+            if solver == "heuristic" else "numpy"
+        if budget is None:
+            budget = self.default_budget
+        ticket = Ticket(request, instances, grid, names, engine, budget)
+        with self._cond:
+            if self._closed:
+                raise ServiceClosed("plan service is closed")
+            if len(self._queue) >= self.max_queue:
+                self._bump(rejected_overloaded=1)
+                raise Overloaded(
+                    f"admission queue full ({len(self._queue)} waiting)",
+                    queue_depth=len(self._queue), max_queue=self.max_queue)
+            self._queue.append(ticket)
+            self._bump(submitted=1)
+            with self._stats_lock:
+                self._counts["max_queue_depth"] = max(
+                    self._counts["max_queue_depth"], len(self._queue))
+            self._cond.notify_all()
+        return ticket
+
+    def plan(self, request: PlanRequest, budget: float | None = None
+             ) -> PlanResult:
+        """Synchronous convenience: ``submit(...).result()``."""
+        return self.submit(request, budget=budget).result()
+
+    # --- worker loop ------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._closed and (self._paused or not self._queue):
+                    self._cond.wait(timeout=0.1)
+                if self._closed:
+                    return
+                drained = list(self._queue)
+                self._queue.clear()
+            groups: dict = {}
+            order = []
+            for t in drained:
+                key = t._coalesce_key()
+                if key not in groups:
+                    groups[key] = []
+                    order.append(key)
+                groups[key].append(t)
+            for key in order:
+                tickets = groups[key]
+                for i in range(0, len(tickets), self.max_batch):
+                    self._serve_batch(tickets[i:i + self.max_batch])
+
+    # --- batch assembly: corruption quarantine ----------------------------
+
+    def _serve_batch(self, tickets: list[Ticket]) -> None:
+        healthy = []
+        for t in tickets:
+            grid = t.grid
+            if self.injector is not None and self.injector.corrupts_request():
+                # the chaos seam poisons this ticket's profiles in flight
+                grid = [[corrupt_profile(p) for p in ps] for ps in grid]
+                t.grid = grid
+            try:
+                validate_resolved(t.instances, grid)
+            except ValueError as e:
+                self._bump(quarantined=1)
+                self._reject(t, InvalidRequest(
+                    f"quarantined at batch assembly: {e}", reason=str(e)))
+                continue
+            healthy.append(t)
+        if healthy:
+            self._bump(batches=1, coalesced_requests=len(healthy))
+            self._run_chain(healthy)
+
+    # --- the degradation ladder -------------------------------------------
+
+    def _chain_for(self, solver: str) -> tuple[str, ...]:
+        return FALLBACK_CHAINS.get(solver, (solver, "asap"))
+
+    def _remaining(self, tickets) -> float | None:
+        rs = [r for r in (t.remaining() for t in tickets) if r is not None]
+        return min(rs) if rs else None
+
+    def _run_chain(self, tickets: list[Ticket],
+                   attempts: list[str] | None = None) -> None:
+        attempts = attempts if attempts is not None else []
+        chain = self._chain_for(tickets[0].solver)
+        for si, stage in enumerate(chain):
+            terminal = si == len(chain) - 1
+            remaining = self._remaining(tickets)
+            if remaining is not None and remaining <= 0 and not terminal:
+                # budget exhausted: jump straight to the terminal rung,
+                # which still returns a feasible schedule
+                attempts.append(f"{stage}:skipped")
+                continue
+            blocked = False
+            attempt = 0
+            while attempt <= self.retries:
+                remaining = self._remaining(tickets)
+                timeout = None if (remaining is None or terminal) \
+                    else max(remaining, 0.05)
+                fut = self._solve_pool.submit(
+                    self._solve_once, stage, tickets, remaining, blocked)
+                try:
+                    res = fut.result(timeout=timeout)
+                except _fut.TimeoutError:
+                    attempts.append(f"{stage}:timeout")
+                    self._bump(timeouts=1)
+                    break                              # next stage
+                except SimulatedFailure:
+                    attempts.append(f"{stage}:crash")
+                    self._bump(retries=1)
+                    attempt += 1
+                    if attempt > self.retries:
+                        break
+                    time.sleep(self.backoff * (2 ** (attempt - 1)))
+                    continue
+                except MemoryError:
+                    attempts.append(f"{stage}:oom")
+                    if blocked:
+                        break                          # blocked retry used
+                    blocked = True
+                    self._bump(oom_retries=1)
+                    attempts.append(f"{stage}:oom-retry-blocked-lp")
+                    continue
+                except Exception as e:
+                    attempts.append(f"{stage}:error")
+                    if len(tickets) > 1:
+                        # quarantine bisect: a poisoned batch-mate must
+                        # not take the others down — every ticket re-runs
+                        # its chain alone, so exactly the poison fails
+                        self._bump(splits=1)
+                        for t in tickets:
+                            self._run_chain(
+                                [t], attempts=["quarantine:split"])
+                        return
+                    if terminal:
+                        self._fail(tickets, attempts, e)
+                        return
+                    break                              # next stage
+                else:
+                    attempts.append(f"{stage}:ok")
+                    self._deliver(tickets, res, stage, attempts)
+                    return
+        self._fail(tickets, attempts, None)
+
+    def _planner_for(self, engine: str, blocked: bool) -> Planner:
+        key = (engine, blocked)
+        p = self._planners.get(key)
+        if p is None:
+            p = self._base.clone(
+                engine=engine,
+                lp_budget_bytes=self.lp_retry_budget_bytes if blocked
+                else None)
+            self._planners[key] = p
+        return p
+
+    def _solve_once(self, stage: str, tickets: list[Ticket],
+                    remaining: float | None, blocked: bool) -> PlanResult:
+        """One chain-stage solve of the whole batch (runs on the solve
+        pool so the watchdog can abandon it)."""
+        if self.injector is not None:
+            self.injector.on_solve(stage)
+        requested = tickets[0].solver
+        if stage == requested:
+            variants = tickets[0].names if requested == "heuristic" else None
+            options = dict(tickets[0].options or {})
+        else:
+            variants = self.fallback_variants if stage == "heuristic" \
+                else None
+            options = {}
+        if stage in ("ilp", "exact"):
+            limit = options.get("time_limit", self.ilp_time_limit)
+            if remaining is not None:
+                limit = min(float(limit), max(remaining, 0.1))
+            options["time_limit"] = limit
+        if stage == "heuristic":
+            engine = tickets[0].engine if requested == "heuristic" else \
+                resolve_engine(self._base.engine,
+                               fanout=sum(t.cells for t in tickets))
+        else:
+            engine = "numpy"
+        planner = self._planner_for(engine, blocked and stage == "heuristic")
+        req = PlanRequest(
+            instances=[i for t in tickets for i in t.instances],
+            profiles=[ps for t in tickets for ps in t.grid],
+            variants=variants, robust=tickets[0].robust, solver=stage,
+            solver_options=options or None)
+        return planner.plan(req)
+
+    # --- delivery ---------------------------------------------------------
+
+    def _deliver(self, tickets: list[Ticket], res: PlanResult, stage: str,
+                 attempts: list[str]) -> None:
+        requested = tickets[0].solver
+        now = time.monotonic()
+        i0 = 0
+        for t in tickets:
+            i1 = i0 + len(t.instances)
+            lower = None if res.lower_bound is None else res.lower_bound[i0:i1]
+            gaps = None if res.mip_gap is None else res.mip_gap[i0:i1]
+            open_gap = gaps is not None and bool(
+                np.any(np.nan_to_num(gaps, nan=0.0) > 1e-9))
+            sub = PlanResult(
+                variants=res.variants, results=res.results[i0:i1],
+                costs=res.costs[i0:i1], engine=res.engine,
+                seconds=res.seconds, robust_requested=res.robust_requested,
+                solver=res.solver, lower_bound=lower, mip_gap=gaps,
+                degraded=(stage != requested) or open_gap,
+                fallback_stage=stage, attempts=tuple(attempts))
+            self._bump(completed=1, degraded=1 if sub.degraded else 0)
+            with self._stats_lock:
+                self._stage_counts[stage] += 1
+                self._latencies.append(now - t.admitted)
+            if not t._fut.set_running_or_notify_cancel():
+                i0 = i1
+                continue
+            t._fut.set_result(sub)
+            i0 = i1
+
+    def _reject(self, ticket: Ticket, err: ServiceError) -> None:
+        if ticket._fut.set_running_or_notify_cancel():
+            ticket._fut.set_exception(err)
+
+    def _fail(self, tickets: list[Ticket], attempts: list[str],
+              last: Exception | None) -> None:
+        self._bump(failed=len(tickets))
+        for t in tickets:
+            self._reject(t, PlanFailure(
+                "every fallback stage failed"
+                + (f" (last: {last})" if last is not None else ""),
+                attempts=tuple(attempts),
+                last_error=repr(last) if last is not None else None))
+
+    # --- telemetry / lifecycle --------------------------------------------
+
+    def _bump(self, **deltas) -> None:
+        with self._stats_lock:
+            for k, v in deltas.items():
+                self._counts[k] += v
+
+    def stats(self) -> dict:
+        """Service telemetry snapshot: admission/degradation counters,
+        coalescing ratio, and plan-latency percentiles."""
+        with self._stats_lock:
+            c = dict(self._counts)
+            lat = np.asarray(self._latencies, dtype=np.float64)
+            stages = dict(self._stage_counts)
+            depth = len(self._queue)
+        batches = c.get("batches", 0)
+        served = c.get("coalesced_requests", 0)
+        return {
+            **{k: c.get(k, 0) for k in (
+                "submitted", "completed", "failed", "degraded",
+                "rejected_overloaded", "rejected_invalid", "quarantined",
+                "splits", "retries", "oom_retries", "timeouts",
+                "batches", "coalesced_requests", "max_queue_depth")},
+            "queue_depth": depth,
+            "coalesce_ratio": served / batches if batches else None,
+            "stages": stages,
+            "latency": {
+                "n": int(lat.size),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3)
+                if lat.size else None,
+                "p99_ms": float(np.percentile(lat, 99) * 1e3)
+                if lat.size else None,
+            },
+        }
+
+    def pause(self) -> None:
+        """Hold the worker (drills/tests: lets callers fill the queue
+        deterministically)."""
+        with self._cond:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cond:
+            self._paused = False
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        """Stop the worker; pending tickets fail with
+        :class:`ServiceClosed` (in-flight batches finish first)."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            pending = list(self._queue)
+            self._queue.clear()
+            self._cond.notify_all()
+        self._worker.join(timeout=30.0)
+        for t in pending:
+            self._reject(t, ServiceClosed("plan service closed before "
+                                          "this ticket was served"))
+        self._solve_pool.shutdown(wait=False, cancel_futures=True)
+
+    def __enter__(self) -> "PlanService":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

@@ -1,0 +1,277 @@
+"""Chaos suite: deterministic fault injection against the PlanService.
+
+Every test scripts :class:`~repro.runtime.fault.ServiceFaultInjector`
+faults (crash / hang / device OOM / poison error / profile corruption)
+into the service's real solve paths and asserts the acceptance
+properties of the resilience issue: under ANY injected fault the caller
+still gets a *feasible* schedule (or a structured rejection), the
+degradation ladder stops at exactly the right stage with the right
+``attempts`` log, quarantine isolates the poisoned request from its
+batch-mates, and a fault-free service stays bit-identical to direct
+``Planner.plan``.
+
+Marked ``chaos`` (deselected from tier-1 via addopts); run with
+``make test-chaos`` / ``pytest -m chaos``. Faults are scripted specs or
+seeded RNG — no real nondeterminism, every run takes the same path.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Planner, PlanRequest
+from repro.cluster import make_cluster
+from repro.core import (
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    heft_mapping,
+    validate_schedule,
+)
+from repro.runtime.fault import FaultSpec, ServiceFaultInjector
+from repro.serve import InvalidRequest, PlanFailure, PlanService
+from repro.workflows import make_workflow
+
+pytestmark = pytest.mark.chaos
+
+
+def _setup(kind="eager", samples=3, seed=3, factor=1.5, scenario="S3"):
+    plat = make_cluster(1, seed=seed)
+    wf = make_workflow(kind, samples, seed=seed)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, factor)
+    prof = generate_profile(scenario, T, plat, J=16, seed=seed)
+    return plat, inst, prof
+
+
+def _assert_same_plan(a, b):
+    assert a.variants == b.variants
+    assert (a.costs == b.costs).all()
+    for ra, rb in zip(a.results, b.results):
+        for ca, cb in zip(ra, rb):
+            for name in ca:
+                assert (ca[name].start == cb[name].start).all(), name
+
+
+def _assert_feasible(res, inst, prof):
+    """Whatever the ladder returned, it is a feasible schedule."""
+    for name in res.variants:
+        validate_schedule(inst, prof, res.result(variant=name).start)
+
+
+# --- single-fault ladder walks ---------------------------------------------
+
+def test_persistent_crash_exhausts_retries_then_degrades():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage="ilp", times=99)])
+    with PlanService(planner.clone(), injector=inj, retries=1,
+                     backoff=0.01) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="ilp"))
+    assert res.degraded and res.fallback_stage == "heuristic"
+    assert res.attempts == ("ilp:crash", "ilp:crash", "heuristic:ok")
+    assert res.variants == svc.fallback_variants
+    _assert_feasible(res, inst, prof)
+    assert inj.fired == [("crash", "ilp")] * 2
+
+
+def test_hang_trips_watchdog_within_budget():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="hang", stage="heuristic", times=5,
+                          seconds=2.0)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        t0 = time.monotonic()
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof),
+                       budget=0.3)
+        elapsed = time.monotonic() - t0
+    # the watchdog abandoned the hung solve at ~budget, not at ~2s
+    assert elapsed < 1.5, elapsed
+    assert res.degraded and res.fallback_stage == "asap"
+    assert res.attempts == ("heuristic:timeout", "asap:ok")
+    _assert_feasible(res, inst, prof)
+
+
+def test_double_oom_exhausts_blocked_retry_then_degrades():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="oom", stage="heuristic", times=2)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+        assert svc.stats()["oom_retries"] == 1
+    assert res.degraded and res.fallback_stage == "asap"
+    assert res.attempts == ("heuristic:oom",
+                            "heuristic:oom-retry-blocked-lp",
+                            "heuristic:oom", "asap:ok")
+    _assert_feasible(res, inst, prof)
+
+
+def test_exact_chain_walks_every_rung():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage="exact", times=9),
+                FaultSpec(kind="crash", stage="ilp", times=9)])
+    with PlanService(planner.clone(), injector=inj, retries=0) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="exact"))
+    assert res.degraded and res.fallback_stage == "heuristic"
+    assert res.attempts == ("exact:crash", "ilp:crash", "heuristic:ok")
+    _assert_feasible(res, inst, prof)
+
+
+def test_budget_blown_mid_chain_skips_to_terminal_asap():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="hang", stage="exact", times=1,
+                          seconds=2.0)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="exact"), budget=0.25)
+    assert res.degraded and res.fallback_stage == "asap"
+    assert res.attempts == ("exact:timeout", "ilp:skipped",
+                            "heuristic:skipped", "asap:ok")
+    _assert_feasible(res, inst, prof)
+
+
+def test_crash_on_every_stage_is_a_structured_failure():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage=None, times=99)])
+    with PlanService(planner.clone(), injector=inj, retries=0,
+                     backoff=0.01) as svc:
+        with pytest.raises(PlanFailure) as ei:
+            svc.plan(PlanRequest(instances=inst, profiles=prof))
+        assert svc.stats()["failed"] == 1
+    d = ei.value.to_dict()
+    assert d["code"] == "plan_failure"
+    assert d["attempts"] == ("heuristic:crash", "asap:crash")
+
+
+# --- quarantine isolation --------------------------------------------------
+
+def test_corrupt_request_is_quarantined_batch_survives():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="corrupt", times=1)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        svc.pause()
+        t1 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        t2 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        t3 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        svc.resume()
+        with pytest.raises(InvalidRequest, match="batch assembly"):
+            t1.result(timeout=120)       # first in queue ate the corruption
+        r2, r3 = t2.result(timeout=120), t3.result(timeout=120)
+        stats = svc.stats()
+    _assert_same_plan(r2, direct)        # batch-mates: full fidelity
+    _assert_same_plan(r3, direct)
+    assert not r2.degraded and not r3.degraded
+    assert stats["quarantined"] == 1
+    assert stats["batches"] == 1 and stats["coalesced_requests"] == 2
+
+
+def test_poison_error_bisects_batch_each_ticket_rechains_alone():
+    plat, inst, prof = _setup(samples=2, seed=5)
+    wf2 = make_workflow("eager", 2, seed=9)
+    plat2 = make_cluster(1, seed=5)
+    inst2 = build_instance(wf2, heft_mapping(wf2, plat2), plat2)
+    prof2 = generate_profile("S1", deadline_from_asap(inst2, 1.5), plat2,
+                             J=16, seed=7)
+    planner = Planner(plat, engine="numpy")
+    d1 = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    d2 = planner.plan(PlanRequest(instances=inst2, profiles=prof2))
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="error", stage="heuristic", times=1)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        svc.pause()
+        t1 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        t2 = svc.submit(PlanRequest(instances=inst2, profiles=prof2))
+        svc.resume()
+        r1, r2 = t1.result(timeout=120), t2.result(timeout=120)
+        assert svc.stats()["splits"] == 1
+    for r, d in ((r1, d1), (r2, d2)):
+        assert r.attempts[0] == "quarantine:split"
+        assert r.attempts[-1] == "heuristic:ok"
+        assert not r.degraded            # solo re-runs reached full fidelity
+        _assert_same_plan(r, d)
+
+
+def test_persistent_poison_degrades_every_split_ticket_to_asap():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="error", stage="heuristic", times=99)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        svc.pause()
+        tickets = [svc.submit(PlanRequest(instances=inst, profiles=prof))
+                   for _ in range(2)]
+        svc.resume()
+        results = [t.result(timeout=120) for t in tickets]
+    for res in results:
+        assert res.degraded and res.fallback_stage == "asap"
+        assert res.attempts == ("quarantine:split", "heuristic:error",
+                                "asap:ok")
+        _assert_feasible(res, inst, prof)
+
+
+# --- seeded probabilistic sweep --------------------------------------------
+
+def test_seeded_random_crash_sweep_always_yields_feasible_plans():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(prob=0.35, seed=1234)
+    with PlanService(planner.clone(), injector=inj, retries=3,
+                     backoff=0.01) as svc:
+        results = [svc.plan(PlanRequest(instances=inst, profiles=prof))
+                   for _ in range(6)]
+        stats = svc.stats()
+    assert stats["completed"] == 6 and stats["failed"] == 0
+    assert inj.fired, "seed produced no faults; pick a different seed"
+    for res in results:
+        assert res.fallback_stage in ("heuristic", "asap")
+        assert res.degraded == (res.fallback_stage != "heuristic")
+        _assert_feasible(res, inst, prof)
+    # the sweep is scripted RNG: same seed, same fault sequence
+    inj2 = ServiceFaultInjector(prob=0.35, seed=1234)
+    with PlanService(planner.clone(), injector=inj2, retries=3,
+                     backoff=0.01) as svc:
+        results2 = [svc.plan(PlanRequest(instances=inst, profiles=prof))
+                    for _ in range(6)]
+    assert inj2.fired == inj.fired
+    for a, b in zip(results, results2):
+        assert a.attempts == b.attempts
+        _assert_same_plan(a, b)
+
+
+# --- fault-free control ----------------------------------------------------
+
+def test_fault_free_mixed_workload_bit_identical_to_direct():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    reqs = [
+        PlanRequest(instances=inst, profiles=prof),
+        PlanRequest(instances=inst, profiles=prof, robust=True),
+        PlanRequest(instances=inst, profiles=prof, solver="asap"),
+        PlanRequest(instances=inst, profiles=prof,
+                    variants=("slack", "pressWR-LS")),
+    ]
+    direct = [planner.plan(r) for r in reqs]
+    with PlanService(planner.clone()) as svc:
+        svc.pause()
+        tickets = [svc.submit(r) for r in reqs]
+        svc.resume()
+        served = [t.result(timeout=120) for t in tickets]
+        stats = svc.stats()
+    for s, d in zip(served, direct):
+        _assert_same_plan(s, d)
+        assert not s.degraded
+    assert stats["degraded"] == 0 and stats["completed"] == 4

@@ -1,0 +1,369 @@
+"""PlanService tier-1 suite: admission, coalescing, structured errors,
+deadline budgets, the degradation ladder's fast paths, resolved-grid
+validation, mip_gap surfacing, and the PlanningSession robustness fixes.
+
+The heavier fault-matrix scenarios (seeded sweeps, watchdog hangs,
+quarantine bisects) live in tests/test_chaos.py behind the ``chaos``
+marker (`make test-chaos`); this file keeps the acceptance-critical
+behaviours in the default tier-1 gate.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Planner, PlanRequest, PlanningSession
+from repro.api.request import validate_resolved
+from repro.cluster import make_cluster
+from repro.core import (
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    heft_mapping,
+    validate_schedule,
+)
+from repro.runtime.fault import FaultSpec, ServiceFaultInjector
+from repro.serve import (
+    InvalidRequest,
+    Overloaded,
+    PlanService,
+    ServiceClosed,
+)
+from repro.workflows import make_workflow
+
+
+def _setup(kind="eager", samples=3, seed=3, factor=1.5, scenario="S3"):
+    plat = make_cluster(1, seed=seed)
+    wf = make_workflow(kind, samples, seed=seed)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, factor)
+    prof = generate_profile(scenario, T, plat, J=16, seed=seed)
+    return plat, inst, prof
+
+
+def _assert_same_plan(a, b):
+    """Bit-identity of two PlanResults: costs, and every cell's starts."""
+    assert a.variants == b.variants
+    assert (a.costs == b.costs).all()
+    for ra, rb in zip(a.results, b.results):
+        for ca, cb in zip(ra, rb):
+            for name in ca:
+                assert (ca[name].start == cb[name].start).all(), name
+
+
+# --- fault-free service == direct Planner.plan -----------------------------
+
+def test_service_fault_free_bit_identical_to_planner():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    with PlanService(planner.clone()) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+    _assert_same_plan(res, direct)
+    assert not res.degraded
+    assert res.fallback_stage == "heuristic"
+    assert res.attempts == ("heuristic:ok",)
+
+
+def test_service_coalesces_concurrent_requests_bit_identically():
+    plat, inst, prof = _setup(samples=2, seed=5)
+    wf2 = make_workflow("eager", 2, seed=9)
+    inst2 = build_instance(wf2, heft_mapping(wf2, plat), plat)
+    prof2 = generate_profile("S1", deadline_from_asap(inst2, 1.5), plat,
+                             J=16, seed=7)
+    planner = Planner(plat, engine="numpy")
+    d1 = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    d2 = planner.plan(PlanRequest(instances=inst2, profiles=prof2))
+    with PlanService(planner.clone()) as svc:
+        svc.pause()                      # hold the worker: deterministic
+        t1 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        t2 = svc.submit(PlanRequest(instances=inst2, profiles=prof2))
+        t3 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        svc.resume()
+        r1, r2, r3 = (t.result(timeout=120) for t in (t1, t2, t3))
+        stats = svc.stats()
+    _assert_same_plan(r1, d1)
+    _assert_same_plan(r2, d2)
+    _assert_same_plan(r3, d1)
+    # all three tickets share one coalesce key -> ONE combined launch
+    assert stats["batches"] == 1
+    assert stats["coalesced_requests"] == 3
+    assert stats["coalesce_ratio"] == 3.0
+    assert stats["completed"] == 3 and stats["degraded"] == 0
+    assert stats["latency"]["n"] == 3
+
+
+def test_service_mixed_solver_queue_groups_by_key():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    da = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                  solver="asap"))
+    dh = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    with PlanService(planner.clone()) as svc:
+        svc.pause()
+        ta = svc.submit(PlanRequest(instances=inst, profiles=prof,
+                                    solver="asap"))
+        th = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        svc.resume()
+        ra, rh = ta.result(timeout=120), th.result(timeout=120)
+        assert svc.stats()["batches"] == 2      # different solver keys
+    _assert_same_plan(ra, da)
+    _assert_same_plan(rh, dh)
+    assert ra.solver == "asap" and not ra.degraded
+
+
+# --- structured rejections -------------------------------------------------
+
+def test_service_overloaded_is_structured():
+    plat, inst, prof = _setup()
+    with PlanService(Planner(plat, engine="numpy"), max_queue=2) as svc:
+        svc.pause()
+        svc.submit(PlanRequest(instances=inst, profiles=prof))
+        svc.submit(PlanRequest(instances=inst, profiles=prof))
+        with pytest.raises(Overloaded) as ei:
+            svc.submit(PlanRequest(instances=inst, profiles=prof))
+        d = ei.value.to_dict()
+        assert d["code"] == "overloaded"
+        assert d["queue_depth"] == 2 and d["max_queue"] == 2
+        assert svc.stats()["rejected_overloaded"] == 1
+        svc.resume()
+
+
+def test_service_invalid_request_rejected_at_admission():
+    plat, inst, prof = _setup()
+    with PlanService(Planner(plat, engine="numpy")) as svc:
+        with pytest.raises(InvalidRequest) as ei:
+            svc.submit(PlanRequest(instances=inst, profiles=[]))
+        assert ei.value.to_dict()["code"] == "invalid_request"
+        # an infeasible horizon is caught structurally, not downstream
+        tiny = generate_profile("S1", 2, plat, J=1, seed=0)
+        with pytest.raises(InvalidRequest):
+            svc.submit(PlanRequest(instances=inst, profiles=tiny))
+        assert svc.stats()["rejected_invalid"] == 2
+        # the service still serves healthy requests afterwards
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+        assert not res.degraded
+
+
+def test_service_closed_rejects_new_and_pending():
+    plat, inst, prof = _setup()
+    svc = PlanService(Planner(plat, engine="numpy"))
+    svc.pause()
+    t = svc.submit(PlanRequest(instances=inst, profiles=prof))
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        t.result(timeout=10)
+    with pytest.raises(ServiceClosed):
+        svc.submit(PlanRequest(instances=inst, profiles=prof))
+
+
+# --- deadline budgets + fast ladder paths ----------------------------------
+
+def test_service_exhausted_budget_still_returns_feasible_asap():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    with PlanService(planner.clone()) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof),
+                       budget=0.0)
+    assert res.degraded and res.fallback_stage == "asap"
+    assert res.attempts == ("heuristic:skipped", "asap:ok")
+    validate_schedule(inst, prof, res.result(variant="asap").start)
+
+
+def test_service_solver_crash_degrades_to_feasible_schedule():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage="heuristic", times=10)])
+    with PlanService(planner.clone(), injector=inj, retries=1,
+                     backoff=0.01) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+    assert res.degraded and res.fallback_stage == "asap"
+    assert res.attempts == ("heuristic:crash", "heuristic:crash", "asap:ok")
+    validate_schedule(inst, prof, res.result(variant="asap").start)
+
+
+def test_service_transient_crash_retries_to_full_fidelity():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage="heuristic", times=1)])
+    with PlanService(planner.clone(), injector=inj, retries=2,
+                     backoff=0.01) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+        assert svc.stats()["retries"] == 1
+    _assert_same_plan(res, direct)          # retry healed: NOT degraded
+    assert not res.degraded
+    assert res.attempts == ("heuristic:crash", "heuristic:ok")
+
+
+def test_service_device_oom_retries_on_blocked_lp_planner():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="oom", stage="heuristic", times=1)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+        assert svc.stats()["oom_retries"] == 1
+    _assert_same_plan(res, direct)
+    assert not res.degraded
+    assert res.attempts == ("heuristic:oom",
+                            "heuristic:oom-retry-blocked-lp",
+                            "heuristic:ok")
+
+
+# --- resolved-grid validation (the quarantine check) -----------------------
+
+def test_validate_resolved_catches_structural_corruption():
+    from repro.runtime.fault import corrupt_profile
+
+    plat, inst, prof = _setup()
+    validate_resolved([inst], [[prof]])                  # healthy passes
+    with pytest.raises(ValueError, match="budget length"):
+        validate_resolved([inst], [[corrupt_profile(prof)]])
+    with pytest.raises(ValueError, match="critical path"):
+        validate_resolved([inst], [[generate_profile("S1", 2, plat, J=1,
+                                                     seed=0)]])
+    import dataclasses
+
+    idx = inst.succ_idx.copy()
+    idx[0] = inst.num_tasks + 5                          # dangling edge
+    bad = dataclasses.replace(inst, succ_idx=idx)
+    with pytest.raises(ValueError, match="adjacency"):
+        validate_resolved([bad], [[prof]])
+
+
+# --- mip_gap / lower_bound surfacing (ilp time-limit exits) ----------------
+
+def test_ilp_time_limit_exit_surfaces_gap_not_failure(monkeypatch):
+    """A time-limited ILP that returns an incumbent is a degraded success:
+    the PlanResult carries the schedule + lower_bound + mip_gap, and the
+    service flags it degraded without walking further down the chain."""
+    import repro.core.ilp as ilp_mod
+    from repro.core.ilp import ILPResult
+
+    plat, inst, prof = _setup(samples=2, seed=5)
+    asap = Planner(plat, engine="numpy").plan(
+        PlanRequest(instances=inst, profiles=prof, solver="asap"))
+    incumbent = asap.result(variant="asap").start
+    cost = int(asap.costs[0, 0, 0])
+
+    def fake_solve(inst_, prof_, time_limit=300.0, mip_gap=0.0):
+        return ILPResult(cost=float(cost), start=incumbent.copy(),
+                         status=1, message="time limit reached",
+                         lower_bound=cost * 0.5, mip_gap=0.5)
+
+    monkeypatch.setattr(ilp_mod, "solve_ilp", fake_solve)
+    planner = Planner(plat, engine="numpy")
+    res = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="ilp"))
+    assert res.mip_gap is not None and res.mip_gap[0, 0] == 0.5
+    assert res.lower_bound[0, 0] == int(np.ceil(cost * 0.5 - 1e-6))
+    with PlanService(planner.clone()) as svc:
+        served = svc.plan(PlanRequest(instances=inst, profiles=prof,
+                                      solver="ilp"))
+    assert served.degraded                       # open gap => degraded
+    assert served.fallback_stage == "ilp"        # but NOT a fallback
+    assert served.attempts == ("ilp:ok",)
+    assert served.mip_gap[0, 0] == 0.5
+    validate_schedule(inst, prof, served.result(variant="ilp").start)
+
+
+@pytest.mark.ilp
+def test_exact_through_service_matches_direct_and_certifies():
+    pytest.importorskip("scipy.optimize", reason="needs scipy HiGHS")
+    from repro.core.carbon import PowerProfile
+    from repro.core.dag import trivial_mapping
+    from repro.workflows import layered_random
+
+    rng = np.random.default_rng(0)
+    plat = make_cluster(1, seed=0)
+    wf = layered_random(6, 3, seed=0)
+    inst = build_instance(wf, trivial_mapping(wf, plat, by="round_robin"),
+                          plat, dur=rng.integers(1, 6, size=wf.n))
+    T = deadline_from_asap(inst, 1.5)
+    bounds = np.unique(np.round(np.linspace(0, T, 5)).astype(np.int64))
+    budget = plat.idle_total + rng.integers(
+        0, max(int(inst.task_work.max()) // 2, 2), size=len(bounds) - 1)
+    prof = PowerProfile(bounds=bounds, budget=budget)
+
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof,
+                                      solver="exact"))
+    with PlanService(planner.clone()) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof,
+                                   solver="exact"))
+    _assert_same_plan(res, direct)
+    assert not res.degraded                      # proven optimum
+    assert res.lower_bound[0, 0] == res.costs[0, 0, 0]
+
+
+# --- PlanningSession robustness fixes --------------------------------------
+
+def _session_fixture(n_windows=3):
+    plat, inst, _ = _setup(factor=1.6)
+    from repro.api.request import window_profile
+
+    W = deadline_from_asap(inst, 1.6)
+    long = generate_profile("S3", n_windows * W, plat, J=48, seed=7)
+    return plat, inst, lambda k: window_profile(long, k * W, W)
+
+
+def test_session_evicts_failed_future_and_resubmits_once():
+    plat, inst, wprofs = _session_fixture()
+    planner = Planner(plat, engine="numpy")
+    real_plan = planner.plan
+    boom = {"left": 1}
+
+    def flaky_plan(request):
+        if boom["left"]:
+            boom["left"] -= 1
+            raise RuntimeError("transient device hiccup")
+        return real_plan(request)
+
+    planner.plan = flaky_plan
+    with PlanningSession(planner, inst, wprofs, n_windows=3,
+                         lookahead=0) as sess:
+        res = sess.plan_for(0)           # first background plan fails,
+        assert res.shape[0] == 1         # eviction + resubmit heals it
+        ref = real_plan(sess.request_for(0))
+        assert (res.costs == ref.costs).all()
+
+
+def test_session_second_failure_propagates_and_sticks():
+    plat, inst, wprofs = _session_fixture()
+    planner = Planner(plat, engine="numpy")
+
+    def always_fail(request):
+        raise RuntimeError("persistent failure")
+
+    planner.plan = always_fail
+    with PlanningSession(planner, inst, wprofs, n_windows=3,
+                         lookahead=0) as sess:
+        with pytest.raises(RuntimeError, match="persistent"):
+            sess.plan_for(0)             # retried once, then propagates
+        with pytest.raises(RuntimeError, match="persistent"):
+            sess.plan_for(0)             # sticky: no unbounded resubmits
+
+
+def test_session_close_cancels_prefetched_windows():
+    plat, inst, wprofs = _session_fixture(n_windows=8)
+    planner = Planner(plat, engine="numpy")
+    real_plan = planner.plan
+
+    def slow_plan(request):
+        time.sleep(0.25)
+        return real_plan(request)
+
+    planner.plan = slow_plan
+    sess = PlanningSession(planner, inst, wprofs, n_windows=8, lookahead=6)
+    sess.plan_for(0)                     # queues 6 lookahead windows
+    t0 = time.monotonic()
+    sess.close()                         # cancel_futures: don't drain them
+    closed_in = time.monotonic() - t0
+    # closing waits for at most the one in-flight plan, not 6 queued ones
+    assert closed_in < 1.5, closed_in
+    with pytest.raises(RuntimeError):
+        sess.plan_for(1)
