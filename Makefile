@@ -7,8 +7,8 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-device test-host test-exact test-big test-chaos bench \
-	bench-smoke planner-smoke verify
+.PHONY: test test-device test-host test-exact test-big test-chaos \
+	test-chaos-flake bench bench-smoke planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -31,9 +31,22 @@ test-big:
 	$(PY) -m pytest -x -q -m big
 
 # chaos drills: scripted fault injection against the PlanService
-# degradation ladder (deselected from tier-1; deterministic per seed)
+# degradation ladder + worker supervision (deselected from tier-1;
+# deterministic per seed). Runs the whole suite under BOTH a single
+# drain worker and a 4-worker pool — supervision, requeue, and
+# bit-identity must hold at every worker count.
 test-chaos:
-	$(PY) -m pytest -x -q -m chaos
+	$(PY) -m pytest -x -q -m chaos --chaos-workers 1
+	$(PY) -m pytest -x -q -m chaos --chaos-workers 4
+
+# flake guard: the 4-worker chaos suite repeated across 3 seed offsets —
+# catches interleaving-dependent failures the single deterministic run
+# can miss
+test-chaos-flake:
+	for seed in 0 1 2; do \
+	  $(PY) -m pytest -x -q -m chaos --chaos-workers 4 \
+	    --chaos-seed $$seed || exit 1; \
+	done
 
 bench:
 	$(PY) -m benchmarks.run --only portfolio

@@ -28,7 +28,10 @@ Emits ``benchmarks/out/BENCH_portfolio.json``:
   * ``service`` — serving-tier telemetry: a coalesced burst, forced
     degradations, and structured rejections through ``PlanService``,
     reported as queue depth, coalesce ratio, p50/p99 plan latency, and
-    degradation counts;
+    degradation counts; plus worker-pool scaling (the same burst through
+    1 vs 4 drain workers) and the cooperative-cancellation latency (time
+    for the pool to go idle after ``Ticket.cancel`` lands on a wedged
+    solve);
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -251,15 +254,32 @@ def _service_section(cases) -> dict:
     malformed request rejected at admission, and one load-shed
     :class:`~repro.serve.service.Overloaded` rejection — then the
     :meth:`PlanService.stats` snapshot (queue depth, coalesce ratio,
-    p50/p99 plan latency, degradation counts) becomes the payload."""
+    p50/p99 plan latency, degradation counts) becomes the payload.
+
+    Two robustness measurements ride along: ``workers_scaling`` times the
+    same un-coalescable burst (``max_batch=1``) through a 1-worker and a
+    4-worker pool, and ``cancel_latency_ms`` times how long the pool
+    takes to go idle after :meth:`Ticket.cancel` lands on a solve wedged
+    by an injected hang (the cooperative cancellation path end to end).
+    Pure-python numpy solves hold the GIL, so the pool speedup on this
+    engine measures dispatch overhead (~1x), not parallel solve
+    throughput — the pool exists for isolation and supervision, and
+    scales when solves release the GIL (ILP subprocesses, jax device
+    launches).
+
+    All services here run with ``compilation_cache=False`` — the bench
+    must never flip the persistent jax cache on (see the NOTE in
+    :func:`run`)."""
     from repro.api import Planner, PlanRequest
+    from repro.runtime.fault import FaultSpec, ServiceFaultInjector
     from repro.serve import InvalidRequest, Overloaded, PlanService
 
     c = cases[0]
     burst = 6
     planner = Planner(c.platform, engine="numpy")
     req = PlanRequest(instances=c.inst, profiles=c.profile)
-    with PlanService(planner, max_queue=burst + 2) as svc:
+    with PlanService(planner, max_queue=burst + 2,
+                     compilation_cache=False) as svc:
         svc.pause()                      # let the burst pile up: coalesce
         tickets = [svc.submit(req) for _ in range(burst)]
         svc.resume()
@@ -282,6 +302,47 @@ def _service_section(cases) -> dict:
             t.result(timeout=600)
         stats = svc.stats()
     assert all(d.degraded and d.fallback_stage == "asap" for d in degraded)
+
+    # Worker-count scaling: max_batch=1 defeats coalescing so the burst
+    # is `burst` independent solves — the only speedup source is the pool.
+    def _pool_burst_seconds(workers: int):
+        pool_planner = Planner(c.platform, engine="numpy")
+        with PlanService(pool_planner, workers=workers, max_batch=1,
+                         max_queue=2 * burst,
+                         compilation_cache=False) as pool:
+            pool.pause()
+            ts = [pool.submit(req) for _ in range(burst)]
+            t0 = time.perf_counter()
+            pool.resume()
+            for t in ts:
+                t.result(timeout=600)
+            return time.perf_counter() - t0, pool.stats()
+
+    seconds_w1, _ = _pool_burst_seconds(1)
+    seconds_w4, stats_w4 = _pool_burst_seconds(4)
+
+    # Cancellation latency: wedge the first solve with an injected hang,
+    # cancel its ticket, and time the pool back to inflight_solves == 0 —
+    # this is the watchdog->CancelToken->solver-checkpoint path, not a
+    # queue drop.
+    inj = ServiceFaultInjector(faults=[
+        FaultSpec(kind="hang", stage="heuristic", times=1, seconds=60.0)])
+    hang_planner = Planner(c.platform, engine="numpy")
+    with PlanService(hang_planner, injector=inj,
+                     compilation_cache=False) as hang_svc:
+        ticket = hang_svc.submit(req)
+        deadline = time.monotonic() + 30.0
+        while (hang_svc.stats()["inflight_solves"] == 0
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+        t0 = time.perf_counter()
+        ticket.cancel("bench cancellation probe")
+        while (hang_svc.stats()["inflight_solves"] > 0
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+        cancel_latency_ms = (time.perf_counter() - t0) * 1e3
+        cancel_stats = hang_svc.stats()
+
     return {
         "case": c.name,
         "burst": burst,
@@ -295,6 +356,18 @@ def _service_section(cases) -> dict:
         "stages": stats["stages"],
         "latency_p50_ms": stats["latency"]["p50_ms"],
         "latency_p99_ms": stats["latency"]["p99_ms"],
+        "workers_scaling": {
+            "burst": burst,
+            "seconds_1_worker": seconds_w1,
+            "seconds_4_workers": seconds_w4,
+            "speedup": (seconds_w1 / seconds_w4
+                        if seconds_w4 > 0 else None),
+            "worker_restarts": stats_w4["worker_restarts"],
+            "priority_inversions": stats_w4["priority_inversions"],
+        },
+        "cancel_latency_ms": cancel_latency_ms,
+        "cancel_checks": cancel_stats["cancel_checks"],
+        "cancelled_solves": cancel_stats["cancelled_solves"],
     }
 
 
@@ -500,6 +573,12 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
          f";p99_ms={service['latency_p99_ms']:.1f}"
          f";degraded={service['degraded']}/{service['completed']}"
          f";shed={service['rejected_overloaded']}")
+    ws = service["workers_scaling"]
+    emit("planner_service_pool", ws["seconds_4_workers"] * 1e6,
+         f"speedup_4w={ws['speedup']:.2f}x"
+         f";burst={ws['burst']}"
+         f";cancel_ms={service['cancel_latency_ms']:.1f}"
+         f";cancel_checks={service['cancel_checks']}")
     for gc in gaps["cases"]:
         asap_s = ("n/a" if gc["gap_asap"] is None
                   else f"{gc['gap_asap']:.3f}")

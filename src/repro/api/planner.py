@@ -128,11 +128,17 @@ class Planner:
 
     # --- planning --------------------------------------------------------
 
-    def plan(self, request: PlanRequest | None = None, /, **kw) -> PlanResult:
+    def plan(self, request: PlanRequest | None = None, /,
+             cancel=None, **kw) -> PlanResult:
         """Evaluate one request grid; see :class:`PlanRequest`.
 
         ``plan(instances=..., profiles=..., ...)`` builds the request
         inline; passing a prebuilt :class:`PlanRequest` is equivalent.
+        ``cancel`` (an optional :class:`repro.core.cancel.CancelToken`)
+        is threaded into the solver, which polls it at its chunk
+        boundaries and raises :class:`repro.core.cancel.Cancelled` when
+        the token fires — the serving tier's watchdog and
+        ``Ticket.cancel()`` route through this.
         """
         if request is None:
             request = PlanRequest(**kw)
@@ -156,7 +162,7 @@ class Planner:
             mu=self.ls.mu, validate=self.validate, engine=engine,
             graphs=graphs, commit_k=self.ls.commit_k,
             ls_max_rounds=self.ls.max_rounds,
-            options=request.solver_options)
+            options=request.solver_options, cancel=cancel)
         cells = out.cells
         costs = np.array(
             [[[cells[i][p][n].cost for n in names] for p in range(P)]

@@ -64,6 +64,74 @@ class PlanResult:
         """(instances, profiles, variants)."""
         return tuple(self.costs.shape)
 
+    # --- RPC-ready wire shape -------------------------------------------
+
+    def summary_dict(self) -> dict:
+        """The JSON-safe wire summary of this result (no schedules).
+
+        Everything an RPC front needs to route on — the cost tensor, the
+        degradation record (``degraded``/``fallback_stage``/``attempts``),
+        and the bound certificates — as plain lists/ints/floats/None:
+        ``json.dumps`` round-trips it byte-for-byte, and
+        :meth:`summary_from_dict` restores an equivalent summary-level
+        result (``restored.summary_dict() == d``). NaN gap cells travel
+        as ``None`` (JSON has no NaN).
+        """
+        def grid(a, none_nan=False):
+            if a is None:
+                return None
+            a = np.asarray(a)
+            if none_nan:
+                return [[None if not np.isfinite(x) else float(x)
+                         for x in row] for row in a]
+            return [[int(x) for x in row] for row in a]
+
+        return {
+            "variants": list(self.variants),
+            "costs": [grid(self.costs[i]) for i in range(len(self.costs))],
+            "engine": self.engine,
+            "seconds": float(self.seconds),
+            "robust_requested": bool(self.robust_requested),
+            "solver": self.solver,
+            "lower_bound": grid(self.lower_bound),
+            "mip_gap": grid(self.mip_gap, none_nan=True),
+            "degraded": bool(self.degraded),
+            "fallback_stage": self.fallback_stage,
+            "attempts": list(self.attempts),
+        }
+
+    @classmethod
+    def summary_from_dict(cls, d: dict) -> "PlanResult":
+        """Rebuild a summary-level result from :meth:`summary_dict`.
+
+        Schedules do not travel on the wire, so ``results`` comes back
+        empty; every other field (including the cost tensor and the
+        degradation record) round-trips losslessly —
+        ``cls.summary_from_dict(d).summary_dict() == d``.
+        """
+        def arr(g, dtype=np.int64, nan_none=False):
+            if g is None:
+                return None
+            if nan_none:
+                return np.array([[np.nan if x is None else float(x)
+                                  for x in row] for row in g], dtype=dtype)
+            return np.asarray(g, dtype=dtype)
+
+        return cls(
+            variants=tuple(d["variants"]),
+            results=[],
+            costs=np.asarray(d["costs"], dtype=np.int64),
+            engine=d["engine"],
+            seconds=float(d["seconds"]),
+            robust_requested=bool(d["robust_requested"]),
+            solver=d["solver"],
+            lower_bound=arr(d.get("lower_bound")),
+            mip_gap=arr(d.get("mip_gap"), dtype=np.float64, nan_none=True),
+            degraded=bool(d["degraded"]),
+            fallback_stage=d.get("fallback_stage"),
+            attempts=tuple(d.get("attempts", ())),
+        )
+
     def result(self, instance: int = 0, profile: int = 0,
                variant: str | None = None) -> ScheduleResult:
         """One cell's :class:`ScheduleResult` (default: the cell's best)."""

@@ -21,6 +21,7 @@ from __future__ import annotations
 import concurrent.futures as _fut
 
 from repro.api.request import PlanRequest
+from repro.core.cancel import Cancelled, CancelToken
 
 
 class PlanningSession:
@@ -69,6 +70,7 @@ class PlanningSession:
         self._pool = _fut.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="planning-session")
         self._plans: dict[int, _fut.Future] = {}
+        self._tokens: dict[int, CancelToken] = {}
         self._retried: set[int] = set()
         self._closed = False
 
@@ -81,8 +83,12 @@ class PlanningSession:
     def _submit(self, window: int) -> None:
         if (0 <= window < self.n_windows and window not in self._plans
                 and not self._closed):
+            # each window's plan carries its own CancelToken so close()
+            # can stop the ONE in-flight solve, not just the queue
+            token = CancelToken()
+            self._tokens[window] = token
             self._plans[window] = self._pool.submit(
-                self.planner.plan, self.request_for(window))
+                self.planner.plan, self.request_for(window), cancel=token)
 
     def plan_for(self, window: int):
         """Window ``window``'s :class:`PlanResult`; blocks only when its
@@ -105,13 +111,14 @@ class PlanningSession:
             self._submit(nxt)
         try:
             return self._plans[window].result()
-        except _fut.CancelledError:
+        except (_fut.CancelledError, Cancelled):
             raise RuntimeError("planning session is closed") from None
         except Exception:
             if window in self._retried or self._closed:
                 raise
             self._retried.add(window)
             del self._plans[window]
+            self._tokens.pop(window, None)
             self._submit(window)
             return self._plans[window].result()
 
@@ -122,10 +129,14 @@ class PlanningSession:
 
     def close(self) -> None:
         """Close the session without draining the lookahead: queued
-        prefetch plans are cancelled (``cancel_futures``), so closing
-        mid-run returns as soon as the one in-flight plan (if any)
-        finishes instead of planning every prefetched window first."""
+        prefetch plans are cancelled (``cancel_futures``) AND the one
+        in-flight plan (if any) is cancelled through its
+        :class:`~repro.core.cancel.CancelToken`, so closing mid-run
+        returns within one solver chunk instead of waiting for the
+        in-flight window to plan to completion first."""
         self._closed = True
+        for token in self._tokens.values():
+            token.cancel("session closed")
         self._pool.shutdown(wait=True, cancel_futures=True)
 
     def __enter__(self):

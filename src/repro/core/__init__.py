@@ -16,6 +16,7 @@ from repro.core.carbon import (  # noqa: F401
     schedule_cost_jnp,
     validate_schedule,
 )
+from repro.core.cancel import Cancelled, CancelToken  # noqa: F401
 from repro.core.dag import FixedMapping, Instance, build_instance, trivial_mapping  # noqa: F401
 from repro.core.estlst import asap_schedule, compute_est, compute_lst, makespan  # noqa: F401
 from repro.core.greedy_jax import (  # noqa: F401

@@ -23,6 +23,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import LinearConstraint, milp
 
+from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile
 from repro.core.dag import Instance
 
@@ -40,7 +41,18 @@ class ILPResult:
 
 
 def solve_ilp(inst: Instance, profile: PowerProfile,
-              time_limit: float = 300.0, mip_gap: float = 0.0) -> ILPResult:
+              time_limit: float = 300.0, mip_gap: float = 0.0,
+              cancel=None) -> ILPResult:
+    # Cooperative cancellation: scipy's milp wrapper exposes no HiGHS
+    # interrupt callback, so an in-flight MILP cannot be stopped from
+    # outside — the token's deadline therefore CLAMPS time_limit before
+    # the solve starts (the solve can never outlive the budget by more
+    # than HiGHS's limit-check granularity), and the model build below
+    # polls the token between row families.
+    checkpoint(cancel)
+    if cancel is not None and cancel.deadline is not None:
+        time_limit = min(float(time_limit),
+                         max(cancel.remaining() or 0.0, 0.1))
     N = inst.num_tasks
     T = profile.T
     dur = inst.dur
@@ -72,6 +84,7 @@ def solve_ilp(inst: Instance, profile: PowerProfile,
         r += 1
 
     # precedence (aggregated start-time form), one row per edge of G_c
+    checkpoint(cancel)
     for v in range(N):
         for u in inst.preds(v):
             u = int(u)
@@ -84,6 +97,7 @@ def solve_ilp(inst: Instance, profile: PowerProfile,
             r += 1
 
     # power rows: bu_t - sum_v w_v * r(v,t) >= -g_unit[t]
+    checkpoint(cancel)
     for t in range(T):
         rows.append(r); cols.append(n_s + t); vals.append(1.0)
         for v in range(N):
@@ -96,6 +110,7 @@ def solve_ilp(inst: Instance, profile: PowerProfile,
         lo.append(-float(g_unit[t])); hi.append(np.inf)
         r += 1
 
+    checkpoint(cancel)                    # last poll before the MILP
     A = sp.csr_matrix((vals, (rows, cols)), shape=(r, n_var))
     c = np.concatenate([np.zeros(n_s), np.ones(T)])
     integrality = np.concatenate([np.ones(n_s), np.zeros(T)])

@@ -29,6 +29,7 @@ import functools
 
 import numpy as np
 
+from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile, work_timeline
 from repro.core.dag import Instance
 from repro.core.local_search import apply_move, dyn_bounds, \
@@ -86,7 +87,8 @@ def _commit_round(inst, T, rem, start, gains, mu) -> bool:
 def local_search_batched(inst: Instance, profile: PowerProfile,
                          start: np.ndarray, mu: int = 10,
                          max_rounds: int = 200,
-                         interpret: bool | None = None) -> np.ndarray:
+                         interpret: bool | None = None,
+                         cancel=None) -> np.ndarray:
     T = profile.T
     start = np.asarray(start, dtype=np.int64).copy()
     rem = (profile.unit_budget(inst.idle_total)
@@ -100,6 +102,7 @@ def local_search_batched(inst: Instance, profile: PowerProfile,
              np.repeat(np.arange(N), np.diff(inst.succ_ptr)), inst.succ_idx)
 
     for _ in range(max_rounds):
+        checkpoint(cancel)               # per-round cancellation rung
         lo, hi = _dyn_windows(start, dur, T, edges)
         gains = np.asarray(ls_gains(
             rem.astype(np.float32), start.astype(np.float32),
@@ -297,7 +300,8 @@ def local_search_portfolio_multi(inst: Instance, T: int,
                                  ctx: dict | None = None,
                                  polish: bool = True,
                                  commit_k: int | None = None,
-                                 adjacency: str | None = None) -> np.ndarray:
+                                 adjacency: str | None = None,
+                                 cancel=None) -> np.ndarray:
     """Hill-climb a batch of schedule rows of one instance at once.
 
     The portfolio engine's climber: rows are any mix of ``-LS`` variants
@@ -323,6 +327,10 @@ def local_search_portfolio_multi(inst: Instance, T: int,
         gather tables instead (:func:`_padded_adjacency`) — bit-identical
         bounds, the form the blocked-lp big-instance path uses so no
         dense N x N tensor exists anywhere in the climb.
+      cancel:       optional :class:`repro.core.cancel.CancelToken`,
+        polled before the device climb launch and between sequential
+        polish rounds (the device ``while_loop`` itself is one
+        uninterruptible launch bounded by ``max_rounds``).
     Returns:
       int64 [R, N] improved schedules; per-row cost is monotonically
       non-increasing, and no row terminates while a sequential reference
@@ -380,6 +388,7 @@ def local_search_portfolio_multi(inst: Instance, T: int,
         succ_p[:N, :N] = succ
         adj_args = (jnp.asarray(pred_p), jnp.asarray(succ_p))
 
+    checkpoint(cancel)                   # last rung before the device climb
     climbed = np.asarray(_climb_impl(
         mu, max_rounds, _COMMIT_K if commit_k is None else int(commit_k),
         padded)(
@@ -397,6 +406,7 @@ def local_search_portfolio_multi(inst: Instance, T: int,
             while budget > 0 and reference_round(inst, T, rem_pad, pad,
                                                  starts[i], mu, ctx):
                 budget -= 1
+                checkpoint(cancel)       # per-polish-round rung
     return starts
 
 
@@ -407,7 +417,8 @@ def local_search_portfolio(inst: Instance, profile: PowerProfile,
                            ctx: dict | None = None,
                            polish: bool = True,
                            commit_k: int | None = None,
-                           adjacency: str | None = None) -> np.ndarray:
+                           adjacency: str | None = None,
+                           cancel=None) -> np.ndarray:
     """Hill-climb a whole portfolio of schedules of one instance at once.
 
     Args:
@@ -427,4 +438,4 @@ def local_search_portfolio(inst: Instance, profile: PowerProfile,
     return local_search_portfolio_multi(
         inst, profile.T, budgets, starts, mu=mu, max_rounds=max_rounds,
         interpret=interpret, ctx=ctx, polish=polish, commit_k=commit_k,
-        adjacency=adjacency)
+        adjacency=adjacency, cancel=cancel)

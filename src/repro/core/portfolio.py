@@ -59,6 +59,7 @@ import time
 import numpy as np
 
 from repro.cluster import Platform
+from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile, schedule_cost, validate_schedule
 from repro.core.cawosched import ALL_VARIANTS, VARIANTS_BY_NAME, \
     ScheduleResult
@@ -289,8 +290,10 @@ def _needed_combos(names) -> list[tuple[str, bool, bool]]:
 
 
 def _assemble(names, prep: PreparedInstance, greedy: dict, ls_done: dict,
-              mu: int, validate: bool) -> dict[str, ScheduleResult]:
+              mu: int, validate: bool,
+              cancel=None) -> dict[str, ScheduleResult]:
     """Finish a portfolio pass: -LS fallbacks, validation, costs."""
+    checkpoint(cancel)    # per-cell rung (numpy -LS climbs run below)
     out: dict[str, ScheduleResult] = {}
     for name in names:
         if name == "asap":
@@ -324,7 +327,8 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                             graphs=None,
                             commit_k: int | str | None = None,
                             ls_max_rounds: int = 200,
-                            lp_budget_bytes: int | None = None
+                            lp_budget_bytes: int | None = None,
+                            cancel=None
                             ) -> list[list[dict[str, ScheduleResult]]]:
     """THE (instances x profiles x variants) scheduling pass.
 
@@ -365,6 +369,11 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     ``"heuristic"`` backend — one of several solvers behind
     ``PlanRequest(solver=...)``, alongside the exact DP/ILP oracles and
     the asap baseline.
+
+    ``cancel`` (an optional :class:`repro.core.cancel.CancelToken`) is
+    polled between greedy cells (numpy) / device bucket launches (jax)
+    and before every per-instance local-search climb, so a cancelled
+    grid stops within one chunk of work instead of finishing I x P x V.
     """
     if engine not in ("numpy", "jax"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -405,6 +414,7 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     if need and engine == "numpy":
         for i in range(I):
             for p in range(P):
+                checkpoint(cancel)       # per-cell cancellation rung
                 prep = PreparedInstance(graph=graphs[i],
                                         overlay=overlays[i][p])
                 greedys[i][p] = _greedy_starts_numpy(prep, need)
@@ -416,6 +426,7 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
         for i, (inst, g) in enumerate(zip(instances, graphs)):
             buckets.setdefault(pad_dims(inst.num_tasks, g.T), []).append(i)
         for (_, Tp), idx in buckets.items():
+            checkpoint(cancel)           # per-bucket-launch rung
             t0 = time.perf_counter()
             rows = []
             for i in idx:
@@ -450,6 +461,7 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
 
         keys = [VARIANTS_BY_NAME[n] for n in ls_names]
         for i in range(I):
+            checkpoint(cancel)           # per-climb-launch rung
             ck = commit_k
             if ck == "auto":
                 # commit width from this instance's gain density: scale
@@ -471,7 +483,8 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                 instances[i], graphs[i].T, row_budgets, rows, mu=mu,
                 max_rounds=ls_max_rounds, ctx=graphs[i].ls_graph,
                 commit_k=ck,
-                adjacency="padded" if graphs[i].lp_is_blocked else "dense")
+                adjacency="padded" if graphs[i].lp_is_blocked else "dense",
+                cancel=cancel)
             dt = (time.perf_counter() - t0) / len(rows)
             for p in range(P):
                 ls_dones[i][p] = {n: (improved[p * len(keys) + j], dt)
@@ -480,7 +493,8 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     return [[_assemble(names,
                        PreparedInstance(graph=graphs[i],
                                         overlay=overlays[i][p]),
-                       greedys[i][p], ls_dones[i][p], mu, validate)
+                       greedys[i][p], ls_dones[i][p], mu, validate,
+                       cancel=cancel)
              for p in range(P)]
             for i in range(I)]
 

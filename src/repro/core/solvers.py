@@ -39,6 +39,7 @@ import time
 
 import numpy as np
 
+from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile, schedule_cost, validate_schedule
 from repro.core.cawosched import ScheduleResult
 from repro.core.dag import Instance
@@ -92,13 +93,19 @@ class Solver:
                    k: int = 3, mu: int = 10, validate: bool = True,
                    engine: str = "numpy", graphs=None, commit_k=None,
                    ls_max_rounds: int = 200,
-                   options: dict | None = None) -> SolveOutput:
+                   options: dict | None = None, cancel=None) -> SolveOutput:
+        """Serve the grid. ``cancel`` is an optional
+        :class:`repro.core.cancel.CancelToken` every solver polls at its
+        chain-rung boundaries (between grid cells for the per-cell
+        solvers) — a cancelled token makes the solve raise
+        :class:`~repro.core.cancel.Cancelled` within one cell of work
+        instead of running the rest of the grid."""
         raise NotImplementedError
 
     # -- shared per-cell driver for the single-column solvers -------------
 
     def _solve_cells(self, instances, profile_grid, names, validate,
-                     cell_fn) -> SolveOutput:
+                     cell_fn, cancel=None) -> SolveOutput:
         """Run ``cell_fn(i, inst, profile) -> (start, lower|None[, gap])``
         over the grid and assemble the common single-column output shape."""
         label = _single_label(names, self)
@@ -110,6 +117,7 @@ class Solver:
         for i, inst in enumerate(instances):
             row = []
             for p, profile in enumerate(profile_grid[i]):
+                checkpoint(cancel)        # per-cell cancellation rung
                 t0 = time.perf_counter()
                 out = cell_fn(i, inst, profile)
                 start, lb = out[0], out[1]
@@ -154,12 +162,12 @@ class HeuristicSolver(Solver):
 
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
-                   commit_k=None, ls_max_rounds=200, options=None
-                   ) -> SolveOutput:
+                   commit_k=None, ls_max_rounds=200, options=None,
+                   cancel=None) -> SolveOutput:
         cells = schedule_portfolio_grid(
             instances, profile_grid, platform, variants=names, k=k, mu=mu,
             validate=validate, engine=engine, graphs=graphs,
-            commit_k=commit_k, ls_max_rounds=ls_max_rounds)
+            commit_k=commit_k, ls_max_rounds=ls_max_rounds, cancel=cancel)
         return SolveOutput(cells=cells, lower=None)
 
 
@@ -176,8 +184,8 @@ class AsapSolver(Solver):
 
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
-                   commit_k=None, ls_max_rounds=200, options=None
-                   ) -> SolveOutput:
+                   commit_k=None, ls_max_rounds=200, options=None,
+                   cancel=None) -> SolveOutput:
         ests = [graphs[i].est0 if graphs is not None
                 else asap_schedule(inst)
                 for i, inst in enumerate(instances)]
@@ -186,7 +194,7 @@ class AsapSolver(Solver):
             return ests[i].copy(), None
 
         return self._solve_cells(instances, profile_grid, names, validate,
-                                 cell)
+                                 cell, cancel=cancel)
 
 
 class DpUniprocSolver(Solver):
@@ -203,8 +211,8 @@ class DpUniprocSolver(Solver):
 
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
-                   commit_k=None, ls_max_rounds=200, options=None
-                   ) -> SolveOutput:
+                   commit_k=None, ls_max_rounds=200, options=None,
+                   cancel=None) -> SolveOutput:
         check = bool((options or {}).get("check", False))
         for inst in instances:
             if not is_uniprocessor(inst):
@@ -229,7 +237,7 @@ class DpUniprocSolver(Solver):
             return start, cost
 
         return self._solve_cells(instances, profile_grid, names, validate,
-                                 cell)
+                                 cell, cancel=cancel)
 
 
 class IlpSolver(Solver):
@@ -255,8 +263,8 @@ class IlpSolver(Solver):
 
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
-                   commit_k=None, ls_max_rounds=200, options=None
-                   ) -> SolveOutput:
+                   commit_k=None, ls_max_rounds=200, options=None,
+                   cancel=None) -> SolveOutput:
         from repro.core.ilp import solve_ilp    # lazy: needs scipy/HiGHS
 
         opts = options or {}
@@ -265,7 +273,7 @@ class IlpSolver(Solver):
 
         def cell(i, inst, profile):
             res = solve_ilp(inst, profile, time_limit=time_limit,
-                            mip_gap=mip_gap)
+                            mip_gap=mip_gap, cancel=cancel)
             if not np.isfinite(res.cost):
                 raise ValueError(
                     f"ILP produced no feasible schedule for instance "
@@ -287,7 +295,7 @@ class IlpSolver(Solver):
             return res.start, int(np.ceil(lb - 1e-6)), gap
 
         return self._solve_cells(instances, profile_grid, names, validate,
-                                 cell)
+                                 cell, cancel=cancel)
 
 
 class ExactSolver(Solver):
@@ -305,8 +313,8 @@ class ExactSolver(Solver):
 
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
-                   commit_k=None, ls_max_rounds=200, options=None
-                   ) -> SolveOutput:
+                   commit_k=None, ls_max_rounds=200, options=None,
+                   cancel=None) -> SolveOutput:
         label = _single_label(names, self)
         I = len(instances)
         P = len(profile_grid[0]) if instances else 0
@@ -315,13 +323,14 @@ class ExactSolver(Solver):
         gaps = np.full((I, P), np.nan)
         any_gap = False
         for i, inst in enumerate(instances):
+            checkpoint(cancel)           # per-instance dispatch rung
             sub = DP if is_uniprocessor(inst) else ILP
             out = sub.solve_grid(
                 [inst], [profile_grid[i]], platform, (label,), k=k, mu=mu,
                 validate=validate, engine=engine,
                 graphs=None if graphs is None else [graphs[i]],
                 commit_k=commit_k, ls_max_rounds=ls_max_rounds,
-                options=options)
+                options=options, cancel=cancel)
             cells[i] = out.cells[0]
             lower[i] = out.lower[0]
             if out.mip_gap is not None:

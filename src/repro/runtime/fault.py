@@ -47,6 +47,16 @@ class FaultSpec:
         solve: the service replaces that request's profiles with
         structurally corrupt ones (:func:`corrupt_profile`), exercising
         admission-side quarantine.
+      * ``"worker-death"`` — consumed per drain-worker batch claim: the
+        worker thread raises out of its drain loop and dies (exercises
+        the supervisor's dead-worker restart + ticket requeue);
+      * ``"wedge"`` — consumed per drain-worker batch claim: the worker
+        stalls ``seconds`` without heartbeating (exercises the
+        supervisor's wedged-worker deposition);
+      * ``"kill"`` — consumed per batch claim: the whole service dies
+        mid-burst (:meth:`repro.serve.service.PlanService.kill`),
+        leaving admitted tickets in the journal (exercises restart
+        replay).
 
     ``stage=None`` matches every chain stage. Specs are consumed in
     order, deterministically — no clock or RNG involvement unless
@@ -58,8 +68,11 @@ class FaultSpec:
     times: int = 1
     seconds: float = 0.25
 
+    KINDS = ("crash", "hang", "oom", "error", "corrupt",
+             "worker-death", "wedge", "kill")
+
     def __post_init__(self):
-        if self.kind not in ("crash", "hang", "oom", "error", "corrupt"):
+        if self.kind not in self.KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
 
 
@@ -100,9 +113,17 @@ class ServiceFaultInjector:
                 return spec
         return None
 
-    def on_solve(self, stage: str) -> None:
+    def on_solve(self, stage: str, cancel=None) -> None:
         """Called by the service inside every chain-stage solve attempt
-        (before the actual plan); may raise or stall."""
+        (before the actual plan); may raise or stall.
+
+        ``cancel`` is the solve's :class:`repro.core.cancel.CancelToken`:
+        an injected ``"hang"`` sleeps in small slices polling it, so a
+        watchdog-cancelled hang releases its solve-pool worker within
+        ~10ms instead of holding it for the scripted duration (a real
+        wedged solve behaves the same way once its own chunk boundary
+        polls the token).
+        """
         spec = self._take(("crash", "hang", "oom", "error"), stage)
         if spec is None:
             if self.prob and self.rng.random() < self.prob:
@@ -116,7 +137,20 @@ class ServiceFaultInjector:
             raise SimulatedOOM(f"injected device OOM at stage {stage!r}")
         if spec.kind == "error":
             raise ValueError(f"injected poison error at stage {stage!r}")
-        time.sleep(spec.seconds)                       # "hang"
+        deadline = time.monotonic() + spec.seconds     # "hang"
+        while time.monotonic() < deadline:
+            if cancel is not None:
+                cancel.check()
+            time.sleep(0.01)
+
+    def on_worker(self) -> FaultSpec | None:
+        """Called by each drain worker once per batch claim; returns the
+        consumed worker-level :class:`FaultSpec` (kind
+        ``"worker-death"``, ``"wedge"`` or ``"kill"``) or None. The
+        service acts on the kind — raising out of the drain loop,
+        stalling without heartbeating for ``spec.seconds``, or killing
+        the whole service mid-burst."""
+        return self._take(("worker-death", "wedge", "kill"), None)
 
     def corrupts_request(self) -> bool:
         """Called by the service once per admitted request at batch

@@ -1,4 +1,9 @@
 from repro.serve.batching import ContinuousBatcher, Request  # noqa: F401
+from repro.serve.journal import (  # noqa: F401
+    TicketJournal,
+    decode_ticket,
+    encode_ticket,
+)
 from repro.serve.service import (  # noqa: F401
     FALLBACK_CHAINS,
     InvalidRequest,
@@ -8,4 +13,5 @@ from repro.serve.service import (  # noqa: F401
     ServiceClosed,
     ServiceError,
     Ticket,
+    TicketCancelled,
 )

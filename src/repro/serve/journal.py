@@ -1,0 +1,167 @@
+"""Write-ahead ticket journal: crash-recoverable admission for the service.
+
+:class:`~repro.serve.service.PlanService` loses every in-flight ticket on
+a process death — the admission queue is memory-only. This module gives
+the service a durable twin of the queue built on the checkpoint
+machinery's torn-write-proof format (:func:`repro.checkpoint.ckpt
+.save_checkpoint`: npz + fsynced json manifest behind an atomic rename):
+
+* :meth:`TicketJournal.record` persists one admitted ticket's *resolved*
+  planning state (instances, profile grid, variant names, solver knobs,
+  budget) BEFORE the ticket enters the in-memory queue — the write-ahead
+  contract: any ticket a worker can possibly pick up already has a
+  journal entry.
+* :meth:`TicketJournal.resolve` deletes the entry once the ticket's
+  future is resolved (delivered, rejected, failed, or cancelled) — so
+  the journal holds exactly the admitted-but-unfinished set.
+* :meth:`TicketJournal.pending` replays that set after a restart; the
+  service re-admits each entry under its original sequence number.
+
+Semantics are **at-least-once**: a crash between delivery and
+:meth:`resolve` replays an already-answered ticket (the old caller is
+gone anyway — the replayed plan simply re-resolves and clears the
+entry); a crash between :meth:`record` and enqueue replays a ticket
+whose caller never saw an admission — same thing. What cannot happen is
+a *lost* ticket: once admitted, the entry survives until some process
+resolves it. Entries are self-contained (the full instance arrays
+travel, not references), so a restarted service needs no caller state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+
+from repro.core.carbon import PowerProfile
+from repro.core.dag import Instance
+
+# array-valued Instance fields; everything else rides the json meta leaf
+_INSTANCE_ARRAYS = ("dur", "proc", "task_work", "pred_ptr", "pred_idx",
+                    "succ_ptr", "succ_idx", "chain_proc_ids", "topo",
+                    "level")
+
+
+def _encode_json(obj) -> np.ndarray:
+    """A json document as a uint8 leaf (the checkpoint format stores
+    arrays only)."""
+    return np.frombuffer(json.dumps(obj).encode(), dtype=np.uint8).copy()
+
+
+def _decode_json(arr):
+    return json.loads(bytes(np.asarray(arr, dtype=np.uint8)).decode())
+
+
+def encode_ticket(instances, grid, names, solver: str, robust: bool,
+                  options: dict | None, budget: float | None) -> dict:
+    """The journal entry of one resolved ticket: a nested dict of arrays
+    (what :func:`repro.checkpoint.ckpt.save_checkpoint` accepts)."""
+    meta = {
+        "solver": solver,
+        "robust": bool(robust),
+        "options": options,
+        "names": list(names),
+        "budget": budget,
+        "instances": [
+            {"name": inst.name, "num_tasks": int(inst.num_tasks),
+             "num_workflow_tasks": int(inst.num_workflow_tasks),
+             "proc_chains": [list(c) for c in inst.proc_chains],
+             "idle_total": int(inst.idle_total)}
+            for inst in instances],
+        "scenarios": [[p.scenario for p in ps] for ps in grid],
+    }
+    state: dict = {"meta": {"json": _encode_json(meta)}}
+    for i, inst in enumerate(instances):
+        state[f"i{i}"] = {f: np.asarray(getattr(inst, f))
+                          for f in _INSTANCE_ARRAYS}
+        for p, prof in enumerate(grid[i]):
+            state[f"i{i}p{p}"] = {"bounds": np.asarray(prof.bounds),
+                                  "budget": np.asarray(prof.budget)}
+    return state
+
+
+def decode_ticket(state: dict):
+    """Invert :func:`encode_ticket`.
+
+    Returns ``(instances, grid, names, solver, robust, options, budget)``
+    with fresh :class:`Instance`/:class:`PowerProfile` objects that
+    compare array-equal to the originals.
+    """
+    meta = _decode_json(state["meta"]["json"])
+    instances = []
+    grid = []
+    for i, im in enumerate(meta["instances"]):
+        arrays = state[f"i{i}"]
+        instances.append(Instance(
+            name=im["name"], num_tasks=im["num_tasks"],
+            num_workflow_tasks=im["num_workflow_tasks"],
+            proc_chains=tuple(tuple(int(t) for t in c)
+                              for c in im["proc_chains"]),
+            idle_total=im["idle_total"],
+            **{f: np.asarray(arrays[f]) for f in _INSTANCE_ARRAYS}))
+        grid.append([
+            PowerProfile(bounds=np.asarray(state[f"i{i}p{p}"]["bounds"]),
+                         budget=np.asarray(state[f"i{i}p{p}"]["budget"]),
+                         scenario=meta["scenarios"][i][p])
+            for p in range(len(meta["scenarios"][i]))])
+    return (instances, grid, tuple(meta["names"]), meta["solver"],
+            meta["robust"], meta["options"], meta["budget"])
+
+
+class TicketJournal:
+    """One directory of write-ahead ticket entries (see module doc).
+
+    Entries are the checkpoint format's ``ckpt_{seq:08d}`` directories;
+    ``seq`` is the service's admission sequence number, so replayed
+    tickets keep their identity across restarts and :meth:`resolve` is
+    naturally idempotent (removing a missing entry is a no-op).
+    """
+
+    def __init__(self, directory: str):
+        self.directory = str(directory)
+        os.makedirs(self.directory, exist_ok=True)
+
+    def _path(self, seq: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{seq:08d}")
+
+    def _seqs(self) -> list[int]:
+        return sorted(
+            int(d[len("ckpt_"):]) for d in os.listdir(self.directory)
+            if d.startswith("ckpt_") and not d.endswith(".tmp"))
+
+    def next_seq(self) -> int:
+        """The next unused sequence number (past every live entry)."""
+        seqs = self._seqs()
+        return (seqs[-1] + 1) if seqs else 0
+
+    def record(self, seq: int, state: dict) -> str:
+        """Persist one entry atomically (write-ahead: call before the
+        ticket becomes claimable)."""
+        from repro.checkpoint.ckpt import save_checkpoint
+
+        return save_checkpoint(state, seq, self.directory)
+
+    def resolve(self, seq: int) -> None:
+        """Drop entry ``seq`` (idempotent — the at-least-once replay of
+        an already-resolved ticket resolves it again harmlessly)."""
+        path = self._path(seq)
+        if os.path.isdir(path):
+            shutil.rmtree(path)
+
+    def pending(self) -> list[tuple[int, dict]]:
+        """Every admitted-but-unresolved entry as ``(seq, state)``, in
+        admission order — what a restarted service replays. Torn or
+        unreadable entries are dropped (the atomic-rename write makes
+        them impossible short of manual tampering)."""
+        from repro.checkpoint.ckpt import load_checkpoint
+
+        out = []
+        for seq in self._seqs():
+            try:
+                state, step = load_checkpoint(self._path(seq))
+            except Exception:
+                shutil.rmtree(self._path(seq), ignore_errors=True)
+                continue
+            out.append((int(step), state))
+        return out

@@ -1,26 +1,50 @@
-"""Resilient always-on planning service over a shared :class:`Planner`.
+"""Supervised multi-worker planning service over a shared :class:`Planner`.
 
-The ROADMAP's serving-tier robustness slice: the `Planner`/`PlanningSession`
-stack is one-process, one-caller, and a single solver exception, device
-``MemoryError``, or ILP overrun takes the whole call down. The paper's own
-structure provides a graceful-degradation ladder — the certified exact
-oracles, the 17-variant heuristic portfolio, and the §5.1 ``asap``
-baseline all serve the same ``(instances x profiles)`` grid shape — so a
-serving tier can *always* emit some feasible schedule before the deadline.
-:class:`PlanService` wires that ladder behind a bounded admission queue:
+The ROADMAP's serving-tier robustness slice. The paper's own structure
+provides a graceful-degradation ladder — the certified exact oracles,
+the 17-variant heuristic portfolio, and the §5.1 ``asap`` baseline all
+serve the same ``(instances x profiles)`` grid shape — so a serving tier
+can *always* emit some feasible schedule before the deadline.
+:class:`PlanService` wires that ladder behind a supervised worker pool:
 
-* **Admission + coalescing** — :meth:`PlanService.submit` validates the
-  request, rejects with a structured :class:`Overloaded` error when the
-  queue is full, and enqueues a :class:`Ticket`. A single worker drains
-  the queue and coalesces compatible tickets (same solver, engine,
-  variant tuple, profile count, robust mode) into shape-bucket batches:
-  one combined-grid ``Planner.plan`` launch serves many callers, and the
-  per-cell results are bit-identical to solo plans (the combined-grid
-  property the Planner API ships with), so coalescing is invisible to
-  callers — fault-free service results equal direct ``Planner.plan``.
+* **Priority admission + coalescing** — :meth:`PlanService.submit`
+  validates the request, rejects with a structured :class:`Overloaded`
+  error when the queue is full, and enqueues a :class:`Ticket` on a
+  deadline-earliest-first priority heap. Budget-less tickets are aged:
+  each gets a *virtual* deadline ``admitted + aging`` seconds out, so a
+  ticket without a budget outranks every ticket submitted more than
+  ``aging`` seconds after it — urgent work jumps the queue, but nothing
+  starves. Drain workers claim the earliest-deadline ticket plus
+  compatible queue-mates (same solver, engine, variant tuple, profile
+  count, robust mode) into one combined-grid ``Planner.plan`` launch;
+  per-cell results are bit-identical to solo plans, so coalescing — and
+  the worker count — is invisible to callers: fault-free service results
+  equal direct ``Planner.plan``.
+
+* **Supervised workers** — ``workers=N`` drain workers serve distinct
+  coalesce groups concurrently, each on its own per-engine
+  :meth:`Planner.clone` (clone caches are private, so workers never race
+  on a ``PreparedGraph``). A supervisor thread watches per-worker
+  heartbeats: a dead worker thread (an escaped exception) or a wedged
+  one (claimed tickets, no heartbeat for ``heartbeat_timeout``) is
+  deposed — its generation is bumped so the stale thread self-exits at
+  the next checkpoint, its in-flight solve is cancelled through the
+  stage token, its unresolved tickets are requeued, and a fresh thread
+  takes the slot.
+
+* **Cooperative cancellation** — every chain-stage solve carries a
+  :class:`repro.core.cancel.CancelToken` threaded through
+  ``Planner.plan`` into the solver layers, which poll it at their chunk
+  boundaries (heuristic chain rungs, ILP matrix assembly, greedy bucket
+  launches, local-search commit rounds). A watchdog timeout, a deposed
+  worker, or a caller's :meth:`Ticket.cancel` therefore *stops* the
+  solve within one rung budget and releases its pool worker — abandoned
+  threads no longer run to completion in the background. Tokens also
+  self-expire at the batch's deadline, so a wedged-but-polling solve
+  times itself out even if the watchdog thread is gone.
 
 * **Deadline budgets + fallback chain** — every ticket carries a
-  wall-clock budget; a watchdog bounds each chain-stage solve by the
+  wall-clock budget; the watchdog bounds each chain-stage solve by the
   minimum remaining budget in the batch and, on timeout or failure,
   walks ``exact -> ilp (time-limited) -> heuristic -> asap``. ILP stages
   get a default ``time_limit`` clamped to the remaining budget, and a
@@ -31,33 +55,41 @@ serving tier can *always* emit some feasible schedule before the deadline.
   ``degraded``, ``fallback_stage``, and the full ``attempts`` log on the
   :class:`~repro.api.result.PlanResult`.
 
+* **Write-ahead ticket journal** — with ``journal_dir=`` set, every
+  admitted ticket is persisted (:mod:`repro.serve.journal`) *before* it
+  becomes claimable and erased when its future resolves. A service that
+  dies mid-burst (a real crash, or the chaos seam's
+  :meth:`PlanService.kill`) leaves exactly the admitted-but-unfinished
+  set on disk; constructing a new service on the same ``journal_dir``
+  replays those tickets into the queue (``service.replayed``) with
+  at-least-once semantics — no admitted ticket is ever lost.
+
 * **Retry + blocked-LP recovery** — transient failures
   (:class:`~repro.runtime.fault.SimulatedFailure`) retry with
-  exponential backoff; a device ``MemoryError`` (the dense
-  ``longest_path_matrix`` envelope, or an injected OOM) retries once on
-  a planner clone with a reduced ``lp_budget_bytes`` so the blocked
+  exponential backoff; a device ``MemoryError`` retries once on a
+  planner clone with a reduced ``lp_budget_bytes`` so the blocked
   longest-path form serves the request instead.
 
 * **Validation + quarantine** — malformed instances/profiles are
   rejected at admission (:func:`repro.api.request.validate_resolved`)
   or, if corruption appears later, quarantined at batch assembly with a
-  structured :class:`InvalidRequest`; a batch-mate's poison never
-  reaches the shared ``PreparedGraph`` cache or fails the batch. If a
-  combined solve still dies on an unexpected error, the batch is
-  bisected: every ticket re-runs its chain in isolation, so exactly the
-  poisoned ticket fails.
+  structured :class:`InvalidRequest`. If a combined solve still dies on
+  an unexpected error, the batch is bisected: every ticket re-runs its
+  chain in isolation, so exactly the poisoned ticket fails.
 
 * **Fault seam + telemetry** — a
-  :class:`~repro.runtime.fault.ServiceFaultInjector` can be plugged in
-  to fire deterministic solver crashes, hangs, device OOMs, and profile
-  corruption inside the real code paths (the chaos suite drives every
-  ladder rung end-to-end); :meth:`PlanService.stats` reports queue
-  depth, coalesce ratio, p50/p99 plan latency, and degradation counts.
+  :class:`~repro.runtime.fault.ServiceFaultInjector` fires deterministic
+  solver crashes, hangs, device OOMs, profile corruption, worker deaths,
+  wedges, and mid-burst kills inside the real code paths;
+  :meth:`PlanService.stats` reports queue depth, worker restarts,
+  cancellation counters, coalesce ratio, and p50/p99 plan latency.
 """
 from __future__ import annotations
 
 import collections
 import concurrent.futures as _fut
+import heapq
+import itertools
 import threading
 import time
 
@@ -66,8 +98,10 @@ import numpy as np
 from repro.api.planner import Planner
 from repro.api.request import PlanRequest, validate_resolved
 from repro.api.result import PlanResult
-from repro.kernels.backend import resolve_engine
+from repro.core.cancel import Cancelled, CancelToken
+from repro.kernels.backend import enable_compilation_cache, resolve_engine
 from repro.runtime.fault import SimulatedFailure, corrupt_profile
+from repro.serve.journal import TicketJournal, decode_ticket, encode_ticket
 
 # The graceful-degradation ladder, per requested solver: every stage
 # serves the same (instances x profiles) grid, each rung cheaper and more
@@ -81,22 +115,54 @@ FALLBACK_CHAINS: dict[str, tuple[str, ...]] = {
     "asap": ("asap",),
 }
 
+# code -> class, filled by ServiceError.__init_subclass__ so
+# ServiceError.from_dict can rebuild the exact subclass off the wire
+_ERROR_TYPES: dict[str, type] = {}
+
+
+def _wire(value):
+    """JSON-safe twin of ``value``: tuples become lists, numpy scalars
+    become python scalars, recursively — what ``to_dict`` promises."""
+    if isinstance(value, dict):
+        return {str(k): _wire(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_wire(v) for v in value]
+    if isinstance(value, np.generic):
+        return value.item()
+    return value
+
 
 class ServiceError(RuntimeError):
     """Structured service rejection: ``code`` + machine-readable details.
 
-    ``to_dict()`` is the wire shape (what an RPC layer would serialize);
-    the message stays human-readable.
+    ``to_dict()`` is the wire shape: plain JSON types only (``json.dumps``
+    round-trips it), and :meth:`from_dict` rebuilds the matching
+    subclass losslessly — ``from_dict(e.to_dict()).to_dict() ==
+    e.to_dict()``. The message stays human-readable.
     """
 
     code = "error"
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        _ERROR_TYPES[cls.code] = cls
 
     def __init__(self, message: str, **details):
         super().__init__(message)
         self.details = details
 
     def to_dict(self) -> dict:
-        return {"code": self.code, "message": str(self), **self.details}
+        return {"code": self.code, "message": str(self),
+                **_wire(self.details)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceError":
+        d = dict(d)
+        klass = _ERROR_TYPES.get(d.pop("code", "error"), ServiceError)
+        return klass(d.pop("message", ""), **d)
+
+
+_ERROR_TYPES[ServiceError.code] = ServiceError
 
 
 class Overloaded(ServiceError):
@@ -125,11 +191,60 @@ class ServiceClosed(ServiceError):
     code = "closed"
 
 
+class TicketCancelled(ServiceError):
+    """The caller cancelled this ticket (:meth:`Ticket.cancel`) before
+    it was served."""
+
+    code = "cancelled"
+
+
+def _try_resolve(fut: _fut.Future, result) -> bool:
+    """Resolve ``fut`` if nobody beat us to it; True = this call won.
+
+    Delivery, rejection, caller cancellation, and supervisor requeue can
+    race on one ticket — each path routes through this (or
+    :func:`_try_reject`) so every future resolves exactly once and the
+    winner alone does the bookkeeping."""
+    try:
+        if not fut.set_running_or_notify_cancel():
+            return False
+        fut.set_result(result)
+        return True
+    except (RuntimeError, _fut.InvalidStateError):
+        return False
+
+
+def _try_reject(fut: _fut.Future, exc: Exception) -> bool:
+    try:
+        if not fut.set_running_or_notify_cancel():
+            return False
+        fut.set_exception(exc)
+        return True
+    except (RuntimeError, _fut.InvalidStateError):
+        return False
+
+
+def _swallow(fut: _fut.Future) -> None:
+    """Done-callback for abandoned solve futures: consume the exception
+    (the cancelled solve's ``Cancelled``) so the executor never logs it."""
+    try:
+        fut.exception()
+    except _fut.CancelledError:
+        pass
+
+
 class Ticket:
-    """One admitted request: a future plus its admission metadata."""
+    """One admitted request: a future plus its admission metadata.
+
+    ``vdeadline`` is the priority-queue key: a ticket with a deadline
+    budget sorts by its real deadline; a budget-less ticket gets the
+    virtual deadline ``admitted + aging``, so it yields to urgent work
+    submitted within ``aging`` seconds of it and outranks everything
+    that arrives later — earliest-deadline-first with no starvation.
+    """
 
     def __init__(self, request: PlanRequest, instances, grid, names,
-                 engine: str, budget: float | None):
+                 engine: str, budget: float | None, aging: float = 30.0):
         self.request = request
         self.instances = instances            # resolved (crop applied)
         self.grid = grid
@@ -140,7 +255,13 @@ class Ticket:
         self.options = request.solver_options
         self.admitted = time.monotonic()
         self.deadline = None if budget is None else self.admitted + budget
+        self.vdeadline = self.deadline if self.deadline is not None \
+            else self.admitted + float(aging)
+        self.journal_seq: int | None = None
         self._fut: _fut.Future = _fut.Future()
+        self._service: "PlanService | None" = None
+        self._batch: "list[Ticket] | None" = None   # batch being served
+        self._stage_token: CancelToken | None = None
 
     @property
     def cells(self) -> int:
@@ -156,8 +277,25 @@ class Ticket:
 
     def result(self, timeout: float | None = None) -> PlanResult:
         """Block for the plan; raises the structured :class:`ServiceError`
-        subclass on rejection/failure."""
+        subclass on rejection/failure/cancellation."""
         return self._fut.result(timeout)
+
+    def cancel(self, reason: str = "cancelled by caller") -> bool:
+        """Cancel this ticket; True if the cancellation won (the ticket
+        had not already resolved).
+
+        Queued tickets simply never run (their journal entry is erased);
+        a ticket inside an in-flight solve cancels that solve through
+        its stage :class:`~repro.core.cancel.CancelToken` once every
+        batch-mate is also done — the solver polls the token at its next
+        chunk boundary and the pool worker goes idle within one rung
+        budget. ``result()`` then raises :class:`TicketCancelled`.
+        """
+        won = _try_reject(self._fut, TicketCancelled(
+            f"ticket cancelled: {reason}", reason=reason))
+        if won and self._service is not None:
+            self._service._note_cancel(self)
+        return won
 
     def _coalesce_key(self):
         try:
@@ -166,6 +304,26 @@ class Ticket:
             opts = object()                    # unique key, no coalescing
         return (self.solver, self.engine, self.names, len(self.grid[0]),
                 self.robust, opts)
+
+
+class _WorkerSlot:
+    """Supervision record of one drain worker.
+
+    ``generation`` is the depose handshake: the supervisor bumps it to
+    retire a wedged thread; the thread checks it at every checkpoint
+    (queue wait, watchdog poll, wedge stall) and self-exits on mismatch,
+    so a stale worker can never deliver over its replacement."""
+
+    __slots__ = ("index", "thread", "generation", "heartbeat", "current",
+                 "token")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.thread: threading.Thread | None = None
+        self.generation = 0
+        self.heartbeat = time.monotonic()
+        self.current: list[Ticket] | None = None
+        self.token: CancelToken | None = None
 
 
 class PlanService:
@@ -177,12 +335,18 @@ class PlanService:
         engine (so coalescing never flips an ``auto`` resolution) and for
         the reduced-budget blocked-LP retry. Its platform/k/ls/validate
         configuration applies to every clone.
+      workers: drain-worker count — concurrent coalesce groups served at
+        once. Fault-free results are bit-identical at any worker count.
       max_queue: admission bound — ``submit`` raises :class:`Overloaded`
         when this many tickets are already waiting.
       max_batch: coalescing bound — at most this many tickets share one
         combined-grid launch.
       default_budget: seconds of wall-clock deadline budget a ticket gets
         when ``submit`` does not specify one (None = unbounded).
+      aging: seconds after which a budget-less ticket outranks newer
+        arrivals (its virtual deadline; see :class:`Ticket`).
+      heartbeat_timeout: seconds of heartbeat silence from a worker with
+        claimed tickets before the supervisor deposes and replaces it.
       retries / backoff: transient-failure policy per chain stage
         (exponential: ``backoff * 2**attempt`` seconds between tries).
       ilp_time_limit: default HiGHS time limit (seconds) for ``ilp`` /
@@ -194,44 +358,81 @@ class PlanService:
       fallback_variants: the (cheap) heuristic column set used when an
         exact chain degrades INTO the heuristic stage; heuristic-first
         requests keep their own variants.
+      journal_dir: write-ahead ticket journal directory (None = no
+        journal). Admitted-but-unfinished tickets found there at
+        construction are replayed into the queue (``self.replayed``).
+      compilation_cache: enable jax's persistent compilation cache at
+        startup (:func:`repro.kernels.backend.enable_compilation_cache`)
+        so a restarted service skips recompiling warm kernels; the
+        resolved directory lands in ``self.compile_cache_dir``.
       injector: optional :class:`~repro.runtime.fault
         .ServiceFaultInjector` — the chaos seam.
     """
 
-    def __init__(self, planner: Planner, *, max_queue: int = 64,
-                 max_batch: int = 8, default_budget: float | None = None,
+    def __init__(self, planner: Planner, *, workers: int = 1,
+                 max_queue: int = 64, max_batch: int = 8,
+                 default_budget: float | None = None, aging: float = 30.0,
+                 heartbeat_timeout: float = 5.0,
                  retries: int = 2, backoff: float = 0.02,
                  ilp_time_limit: float = 30.0,
                  lp_retry_budget_bytes: int = 8 * 2**20,
                  fallback_variants: tuple[str, ...] = ("asap", "pressWR-LS"),
+                 journal_dir: str | None = None,
+                 compilation_cache: bool = True,
                  injector=None):
         self._base = planner
+        self.workers = max(int(workers), 1)
         self.max_queue = int(max_queue)
         self.max_batch = max(int(max_batch), 1)
         self.default_budget = default_budget
+        self.aging = float(aging)
+        self.heartbeat_timeout = float(heartbeat_timeout)
         self.retries = max(int(retries), 0)
         self.backoff = float(backoff)
         self.ilp_time_limit = float(ilp_time_limit)
         self.lp_retry_budget_bytes = int(lp_retry_budget_bytes)
         self.fallback_variants = tuple(fallback_variants)
         self.injector = injector
+        self.compile_cache_dir = None
+        if compilation_cache:
+            try:
+                self.compile_cache_dir = enable_compilation_cache()
+            except Exception:
+                self.compile_cache_dir = None
         self._planners: dict[tuple[str, bool], Planner] = {}
+        self._planners_lock = threading.Lock()
         self._cond = threading.Condition()
-        self._queue: collections.deque[Ticket] = collections.deque()
+        # (vdeadline, seq, ticket) min-heap; resolved tickets are removed
+        # lazily on claim. seq breaks vdeadline ties FIFO.
+        self._queue: list[tuple[float, int, Ticket]] = []
+        self._journal = TicketJournal(journal_dir) if journal_dir else None
+        self._seq = itertools.count(
+            self._journal.next_seq() if self._journal is not None else 0)
         self._paused = False
         self._closed = False
+        self._killed = False
         self._counts = collections.Counter()
         self._stage_counts = collections.Counter()
         self._latencies: collections.deque[float] = \
             collections.deque(maxlen=1024)
         self._stats_lock = threading.Lock()
-        # abandoned (watchdog-timed-out) solves keep their worker until
-        # they return; a few spare workers keep the chain walking
+        # abandoned (cancelled, still unwinding) solves keep their pool
+        # worker until the next token poll; spares keep chains walking
         self._solve_pool = _fut.ThreadPoolExecutor(
-            max_workers=8, thread_name_prefix="plan-service-solve")
-        self._worker = threading.Thread(target=self._run, daemon=True,
-                                        name="plan-service")
-        self._worker.start()
+            max_workers=max(8, 2 * self.workers),
+            thread_name_prefix="plan-service-solve")
+        self.replayed: list[Ticket] = []
+        self._replay_journal()
+        self._slots = [_WorkerSlot(i) for i in range(self.workers)]
+        for slot in self._slots:
+            slot.thread = threading.Thread(
+                target=self._worker_main, args=(slot,), daemon=True,
+                name=f"plan-service-worker-{slot.index}")
+            slot.thread.start()
+        self._supervisor = threading.Thread(
+            target=self._supervise, daemon=True,
+            name="plan-service-supervisor")
+        self._supervisor.start()
 
     # --- admission --------------------------------------------------------
 
@@ -241,7 +442,8 @@ class PlanService:
 
         Raises :class:`InvalidRequest` (malformed request — structured,
         synchronous, nothing shared was touched), :class:`Overloaded`
-        (queue full), or :class:`ServiceClosed`.
+        (queue full), or :class:`ServiceClosed`. With a journal, the
+        ticket is persisted before it becomes claimable (write-ahead).
         """
         if self._closed:
             raise ServiceClosed("plan service is closed")
@@ -258,20 +460,29 @@ class PlanService:
             if solver == "heuristic" else "numpy"
         if budget is None:
             budget = self.default_budget
-        ticket = Ticket(request, instances, grid, names, engine, budget)
+        ticket = Ticket(request, instances, grid, names, engine, budget,
+                        aging=self.aging)
+        ticket._service = self
         with self._cond:
             if self._closed:
                 raise ServiceClosed("plan service is closed")
-            if len(self._queue) >= self.max_queue:
+            depth = sum(1 for _, _, t in self._queue if not t.done())
+            if depth >= self.max_queue:
                 self._bump(rejected_overloaded=1)
                 raise Overloaded(
-                    f"admission queue full ({len(self._queue)} waiting)",
-                    queue_depth=len(self._queue), max_queue=self.max_queue)
-            self._queue.append(ticket)
+                    f"admission queue full ({depth} waiting)",
+                    queue_depth=depth, max_queue=self.max_queue)
+            seq = next(self._seq)
+            if self._journal is not None:
+                ticket.journal_seq = seq
+                self._journal.record(seq, encode_ticket(
+                    instances, grid, names, ticket.solver, ticket.robust,
+                    ticket.options, budget))
+            heapq.heappush(self._queue, (ticket.vdeadline, seq, ticket))
             self._bump(submitted=1)
             with self._stats_lock:
                 self._counts["max_queue_depth"] = max(
-                    self._counts["max_queue_depth"], len(self._queue))
+                    self._counts["max_queue_depth"], depth + 1)
             self._cond.notify_all()
         return ticket
 
@@ -280,35 +491,175 @@ class PlanService:
         """Synchronous convenience: ``submit(...).result()``."""
         return self.submit(request, budget=budget).result()
 
-    # --- worker loop ------------------------------------------------------
+    def _replay_journal(self) -> None:
+        """Re-admit every admitted-but-unfinished ticket a dead service
+        left in the journal (at-least-once: an entry whose answer was
+        delivered but not yet erased replays too — it simply re-resolves
+        and clears). Entries keep their original sequence numbers."""
+        if self._journal is None:
+            return
+        for seq, state in self._journal.pending():
+            try:
+                (instances, grid, names, solver, robust, options,
+                 budget) = decode_ticket(state)
+                validate_resolved(instances, grid)
+            except Exception:
+                self._journal.resolve(seq)
+                self._bump(replay_corrupt=1)
+                continue
+            req = PlanRequest(
+                instances=instances, profiles=grid,
+                variants=names if solver == "heuristic" else None,
+                robust=robust, solver=solver, solver_options=options)
+            engine = resolve_engine(
+                self._base.engine,
+                fanout=len(instances) * len(grid[0])) \
+                if solver == "heuristic" else "numpy"
+            ticket = Ticket(req, instances, grid, names, engine, budget,
+                            aging=self.aging)
+            ticket._service = self
+            ticket.journal_seq = seq
+            heapq.heappush(self._queue, (ticket.vdeadline, seq, ticket))
+            self.replayed.append(ticket)
+            self._bump(submitted=1, replayed=1)
 
-    def _run(self) -> None:
+    # --- worker pool ------------------------------------------------------
+
+    def _has_work(self) -> bool:
+        """Prune resolved heap heads; True if a live ticket waits.
+        Caller holds ``_cond``."""
+        while self._queue and self._queue[0][2].done():
+            heapq.heappop(self._queue)
+        return bool(self._queue)
+
+    def _claim_batch(self) -> list[Ticket] | None:
+        """Pop the earliest-deadline live ticket plus up to
+        ``max_batch - 1`` coalescable queue-mates. Caller holds
+        ``_cond``. Mates are taken in deadline order; claiming a mate
+        *past* a non-coalescable earlier ticket is counted as a
+        priority inversion (the price of batching)."""
+        if not self._has_work():
+            return None
+        lead = heapq.heappop(self._queue)[2]
+        batch = [lead]
+        if self.max_batch > 1 and self._queue:
+            key = lead._coalesce_key()
+            keep, inversions, passed_other = [], 0, False
+            for entry in sorted(self._queue):
+                t = entry[2]
+                if t.done():
+                    continue
+                if len(batch) < self.max_batch and \
+                        t._coalesce_key() == key:
+                    if passed_other:
+                        inversions += 1
+                    batch.append(t)
+                else:
+                    keep.append(entry)
+                    passed_other = True
+            self._queue[:] = keep
+            heapq.heapify(self._queue)
+            if inversions:
+                self._bump(priority_inversions=inversions)
+        return batch
+
+    def _worker_main(self, slot: _WorkerSlot) -> None:
+        try:
+            self._worker_loop(slot)
+        except SimulatedFailure:
+            # injected worker death: die with slot.current still set so
+            # the supervisor requeues the claimed tickets
+            pass
+
+    def _worker_loop(self, slot: _WorkerSlot) -> None:
+        gen = slot.generation
         while True:
             with self._cond:
-                while not self._closed and (self._paused or not self._queue):
-                    self._cond.wait(timeout=0.1)
+                while not self._closed and slot.generation == gen and \
+                        (self._paused or not self._has_work()):
+                    slot.heartbeat = time.monotonic()
+                    self._cond.wait(timeout=0.05)
+                if self._closed or slot.generation != gen:
+                    return
+                batch = self._claim_batch()
+                if batch is None:
+                    continue
+                slot.current = batch
+                slot.heartbeat = time.monotonic()
+            spec = self.injector.on_worker() \
+                if self.injector is not None else None
+            if spec is not None:
+                if spec.kind == "kill":
+                    self.kill()
+                    return
+                if spec.kind == "worker-death":
+                    raise SimulatedFailure("injected worker death")
+                # "wedge": stall WITHOUT heartbeating until the
+                # supervisor deposes this generation (or the scripted
+                # stall ends first under a long heartbeat_timeout)
+                stall = time.monotonic() + spec.seconds
+                while time.monotonic() < stall:
+                    if slot.generation != gen:
+                        return          # deposed; tickets were requeued
+                    time.sleep(0.005)
+            try:
+                self._serve_batch(batch, slot, gen)
+            finally:
+                with self._cond:
+                    if slot.generation == gen:
+                        slot.current = None
+                        slot.token = None
+
+    def _supervise(self) -> None:
+        """Detect dead/wedged workers and replace them (see
+        :class:`_WorkerSlot`). Healthy workers heartbeat from their
+        queue wait and from the watchdog poll during solves, so only a
+        genuinely stalled worker loop trips the timeout."""
+        interval = max(min(self.heartbeat_timeout / 4.0, 0.05), 0.005)
+        while not self._closed:
+            for slot in self._slots:
                 if self._closed:
                     return
-                drained = list(self._queue)
-                self._queue.clear()
-            groups: dict = {}
-            order = []
-            for t in drained:
-                key = t._coalesce_key()
-                if key not in groups:
-                    groups[key] = []
-                    order.append(key)
-                groups[key].append(t)
-            for key in order:
-                tickets = groups[key]
-                for i in range(0, len(tickets), self.max_batch):
-                    self._serve_batch(tickets[i:i + self.max_batch])
+                if slot.thread is not None and not slot.thread.is_alive():
+                    self._restart(slot, "worker died")
+                elif slot.current is not None and \
+                        time.monotonic() - slot.heartbeat \
+                        > self.heartbeat_timeout:
+                    self._restart(slot, "worker wedged")
+            time.sleep(interval)
+
+    def _restart(self, slot: _WorkerSlot, reason: str) -> None:
+        requeued = 0
+        with self._cond:
+            if self._closed:
+                return
+            slot.generation += 1
+            token, current = slot.token, slot.current or []
+            slot.current = None
+            slot.token = None
+            if token is not None:
+                token.cancel(reason)
+            for t in current:
+                if not t.done():
+                    heapq.heappush(self._queue,
+                                   (t.vdeadline, next(self._seq), t))
+                    requeued += 1
+            slot.heartbeat = time.monotonic()
+            slot.thread = threading.Thread(
+                target=self._worker_main, args=(slot,), daemon=True,
+                name=f"plan-service-worker-{slot.index}")
+            slot.thread.start()
+            self._cond.notify_all()
+        self._bump(worker_restarts=1, requeued=requeued)
 
     # --- batch assembly: corruption quarantine ----------------------------
 
-    def _serve_batch(self, tickets: list[Ticket]) -> None:
+    def _serve_batch(self, tickets: list[Ticket], slot: _WorkerSlot,
+                     gen: int) -> None:
         healthy = []
         for t in tickets:
+            if t.done():                       # cancelled while queued
+                continue
             grid = t.grid
             if self.injector is not None and self.injector.corrupts_request():
                 # the chaos seam poisons this ticket's profiles in flight
@@ -324,7 +675,7 @@ class PlanService:
             healthy.append(t)
         if healthy:
             self._bump(batches=1, coalesced_requests=len(healthy))
-            self._run_chain(healthy)
+            self._run_chain(healthy, slot=slot, gen=gen)
 
     # --- the degradation ladder -------------------------------------------
 
@@ -335,8 +686,33 @@ class PlanService:
         rs = [r for r in (t.remaining() for t in tickets) if r is not None]
         return min(rs) if rs else None
 
+    def _watch(self, fut: _fut.Future, slot: _WorkerSlot | None, gen: int,
+               token: CancelToken, budget: float | None):
+        """Poll one stage solve to completion, heartbeating the worker
+        slot. Raises TimeoutError at the budget, or ``Cancelled`` when
+        this worker generation was deposed mid-solve (the supervisor
+        already requeued the tickets; the solve is cancelled and
+        abandoned)."""
+        deadline = None if budget is None else time.monotonic() + budget
+        while True:
+            if slot is not None:
+                slot.heartbeat = time.monotonic()
+                if slot.generation != gen:
+                    token.cancel("worker deposed")
+                    fut.add_done_callback(_swallow)
+                    raise Cancelled("worker deposed")
+            left = None if deadline is None else deadline - time.monotonic()
+            if left is not None and left <= 0:
+                raise _fut.TimeoutError()
+            step = 0.05 if left is None else min(0.05, max(left, 0.001))
+            try:
+                return fut.result(timeout=step)
+            except _fut.TimeoutError:
+                continue
+
     def _run_chain(self, tickets: list[Ticket],
-                   attempts: list[str] | None = None) -> None:
+                   attempts: list[str] | None = None,
+                   slot: _WorkerSlot | None = None, gen: int = 0) -> None:
         attempts = attempts if attempts is not None else []
         chain = self._chain_for(tickets[0].solver)
         for si, stage in enumerate(chain):
@@ -350,17 +726,43 @@ class PlanService:
             blocked = False
             attempt = 0
             while attempt <= self.retries:
+                if all(t.done() for t in tickets):
+                    return                     # cancelled under us
                 remaining = self._remaining(tickets)
-                timeout = None if (remaining is None or terminal) \
+                budget = None if (remaining is None or terminal) \
                     else max(remaining, 0.05)
+                token = CancelToken.with_budget(budget)
+                for t in tickets:
+                    t._batch = tickets
+                    t._stage_token = token
+                if slot is not None:
+                    slot.token = token
                 fut = self._solve_pool.submit(
-                    self._solve_once, stage, tickets, remaining, blocked)
+                    self._solve_once, stage, tickets, remaining, blocked,
+                    token)
                 try:
-                    res = fut.result(timeout=timeout)
+                    res = self._watch(fut, slot, gen, token, budget)
                 except _fut.TimeoutError:
+                    # cancel the abandoned solve: it unwinds at its next
+                    # token poll and frees its pool worker
+                    token.cancel("deadline budget exceeded")
+                    fut.add_done_callback(_swallow)
                     attempts.append(f"{stage}:timeout")
                     self._bump(timeouts=1)
                     break                              # next stage
+                except Cancelled:
+                    if token.reason == "deadline expired":
+                        # the solve timed itself out via the token's own
+                        # deadline (same budget the watchdog enforces)
+                        attempts.append(f"{stage}:timeout")
+                        self._bump(timeouts=1)
+                        break                          # next stage
+                    # client cancelled every ticket, or this worker was
+                    # deposed (tickets requeued) — either way the chain
+                    # is no longer ours to walk
+                    attempts.append(f"{stage}:cancelled")
+                    self._bump(cancelled_solves=1)
+                    return
                 except SimulatedFailure:
                     attempts.append(f"{stage}:crash")
                     self._bump(retries=1)
@@ -386,7 +788,8 @@ class PlanService:
                         self._bump(splits=1)
                         for t in tickets:
                             self._run_chain(
-                                [t], attempts=["quarantine:split"])
+                                [t], attempts=["quarantine:split"],
+                                slot=slot, gen=gen)
                         return
                     if terminal:
                         self._fail(tickets, attempts, e)
@@ -400,47 +803,57 @@ class PlanService:
 
     def _planner_for(self, engine: str, blocked: bool) -> Planner:
         key = (engine, blocked)
-        p = self._planners.get(key)
-        if p is None:
-            p = self._base.clone(
-                engine=engine,
-                lp_budget_bytes=self.lp_retry_budget_bytes if blocked
-                else None)
-            self._planners[key] = p
-        return p
+        with self._planners_lock:
+            p = self._planners.get(key)
+            if p is None:
+                p = self._base.clone(
+                    engine=engine,
+                    lp_budget_bytes=self.lp_retry_budget_bytes if blocked
+                    else None)
+                self._planners[key] = p
+            return p
 
     def _solve_once(self, stage: str, tickets: list[Ticket],
-                    remaining: float | None, blocked: bool) -> PlanResult:
+                    remaining: float | None, blocked: bool,
+                    cancel: CancelToken | None = None) -> PlanResult:
         """One chain-stage solve of the whole batch (runs on the solve
-        pool so the watchdog can abandon it)."""
-        if self.injector is not None:
-            self.injector.on_solve(stage)
-        requested = tickets[0].solver
-        if stage == requested:
-            variants = tickets[0].names if requested == "heuristic" else None
-            options = dict(tickets[0].options or {})
-        else:
-            variants = self.fallback_variants if stage == "heuristic" \
-                else None
-            options = {}
-        if stage in ("ilp", "exact"):
-            limit = options.get("time_limit", self.ilp_time_limit)
-            if remaining is not None:
-                limit = min(float(limit), max(remaining, 0.1))
-            options["time_limit"] = limit
-        if stage == "heuristic":
-            engine = tickets[0].engine if requested == "heuristic" else \
-                resolve_engine(self._base.engine,
-                               fanout=sum(t.cells for t in tickets))
-        else:
-            engine = "numpy"
-        planner = self._planner_for(engine, blocked and stage == "heuristic")
-        req = PlanRequest(
-            instances=[i for t in tickets for i in t.instances],
-            profiles=[ps for t in tickets for ps in t.grid],
-            variants=variants, robust=tickets[0].robust, solver=stage,
-            solver_options=options or None)
-        return planner.plan(req)
+        pool; the watchdog can abandon it and ``cancel`` stops it)."""
+        self._bump(inflight_solves=1)
+        try:
+            if self.injector is not None:
+                self.injector.on_solve(stage, cancel=cancel)
+            requested = tickets[0].solver
+            if stage == requested:
+                variants = tickets[0].names if requested == "heuristic" \
+                    else None
+                options = dict(tickets[0].options or {})
+            else:
+                variants = self.fallback_variants if stage == "heuristic" \
+                    else None
+                options = {}
+            if stage in ("ilp", "exact"):
+                limit = options.get("time_limit", self.ilp_time_limit)
+                if remaining is not None:
+                    limit = min(float(limit), max(remaining, 0.1))
+                options["time_limit"] = limit
+            if stage == "heuristic":
+                engine = tickets[0].engine if requested == "heuristic" else \
+                    resolve_engine(self._base.engine,
+                                   fanout=sum(t.cells for t in tickets))
+            else:
+                engine = "numpy"
+            planner = self._planner_for(engine,
+                                        blocked and stage == "heuristic")
+            req = PlanRequest(
+                instances=[i for t in tickets for i in t.instances],
+                profiles=[ps for t in tickets for ps in t.grid],
+                variants=variants, robust=tickets[0].robust, solver=stage,
+                solver_options=options or None)
+            return planner.plan(req, cancel=cancel)
+        finally:
+            self._bump(inflight_solves=-1,
+                       cancel_checks=cancel.checks
+                       if cancel is not None else 0)
 
     # --- delivery ---------------------------------------------------------
 
@@ -451,7 +864,8 @@ class PlanService:
         i0 = 0
         for t in tickets:
             i1 = i0 + len(t.instances)
-            lower = None if res.lower_bound is None else res.lower_bound[i0:i1]
+            lower = None if res.lower_bound is None \
+                else res.lower_bound[i0:i1]
             gaps = None if res.mip_gap is None else res.mip_gap[i0:i1]
             open_gap = gaps is not None and bool(
                 np.any(np.nan_to_num(gaps, nan=0.0) > 1e-9))
@@ -462,29 +876,49 @@ class PlanService:
                 solver=res.solver, lower_bound=lower, mip_gap=gaps,
                 degraded=(stage != requested) or open_gap,
                 fallback_stage=stage, attempts=tuple(attempts))
-            self._bump(completed=1, degraded=1 if sub.degraded else 0)
-            with self._stats_lock:
-                self._stage_counts[stage] += 1
-                self._latencies.append(now - t.admitted)
-            if not t._fut.set_running_or_notify_cancel():
-                i0 = i1
-                continue
-            t._fut.set_result(sub)
+            if _try_resolve(t._fut, sub):
+                self._bump(completed=1, degraded=1 if sub.degraded else 0)
+                with self._stats_lock:
+                    self._stage_counts[stage] += 1
+                    self._latencies.append(now - t.admitted)
+                self._journal_resolve(t)
             i0 = i1
 
-    def _reject(self, ticket: Ticket, err: ServiceError) -> None:
-        if ticket._fut.set_running_or_notify_cancel():
-            ticket._fut.set_exception(err)
+    def _journal_resolve(self, ticket: Ticket) -> None:
+        if self._journal is not None and ticket.journal_seq is not None:
+            try:
+                self._journal.resolve(ticket.journal_seq)
+            except OSError:
+                pass
+
+    def _note_cancel(self, ticket: Ticket) -> None:
+        """Bookkeeping after a won :meth:`Ticket.cancel`: drop the
+        journal entry and, when every batch-mate of an in-flight solve
+        is also done, cancel the solve itself through the stage token."""
+        self._bump(cancelled=1)
+        self._journal_resolve(ticket)
+        batch, token = ticket._batch, ticket._stage_token
+        if batch is not None and token is not None and \
+                all(t.done() for t in batch):
+            token.cancel("all batch tickets cancelled")
+        with self._cond:
+            self._cond.notify_all()
+
+    def _reject(self, ticket: Ticket, err: ServiceError) -> bool:
+        won = _try_reject(ticket._fut, err)
+        if won:
+            self._journal_resolve(ticket)
+        return won
 
     def _fail(self, tickets: list[Ticket], attempts: list[str],
               last: Exception | None) -> None:
-        self._bump(failed=len(tickets))
         for t in tickets:
-            self._reject(t, PlanFailure(
-                "every fallback stage failed"
-                + (f" (last: {last})" if last is not None else ""),
-                attempts=tuple(attempts),
-                last_error=repr(last) if last is not None else None))
+            if self._reject(t, PlanFailure(
+                    "every fallback stage failed"
+                    + (f" (last: {last})" if last is not None else ""),
+                    attempts=tuple(attempts),
+                    last_error=repr(last) if last is not None else None)):
+                self._bump(failed=1)
 
     # --- telemetry / lifecycle --------------------------------------------
 
@@ -495,12 +929,14 @@ class PlanService:
 
     def stats(self) -> dict:
         """Service telemetry snapshot: admission/degradation counters,
-        coalescing ratio, and plan-latency percentiles."""
+        worker supervision counters, cancellation counters, coalescing
+        ratio, and plan-latency percentiles."""
+        with self._cond:
+            depth = sum(1 for _, _, t in self._queue if not t.done())
         with self._stats_lock:
             c = dict(self._counts)
             lat = np.asarray(self._latencies, dtype=np.float64)
             stages = dict(self._stage_counts)
-            depth = len(self._queue)
         batches = c.get("batches", 0)
         served = c.get("coalesced_requests", 0)
         return {
@@ -508,7 +944,11 @@ class PlanService:
                 "submitted", "completed", "failed", "degraded",
                 "rejected_overloaded", "rejected_invalid", "quarantined",
                 "splits", "retries", "oom_retries", "timeouts",
+                "cancelled", "cancelled_solves", "worker_restarts",
+                "requeued", "replayed", "replay_corrupt",
+                "priority_inversions", "inflight_solves", "cancel_checks",
                 "batches", "coalesced_requests", "max_queue_depth")},
+            "workers": self.workers,
             "queue_depth": depth,
             "coalesce_ratio": served / batches if batches else None,
             "stages": stages,
@@ -522,7 +962,7 @@ class PlanService:
         }
 
     def pause(self) -> None:
-        """Hold the worker (drills/tests: lets callers fill the queue
+        """Hold the workers (drills/tests: lets callers fill the queue
         deterministically)."""
         with self._cond:
             self._paused = True
@@ -532,17 +972,41 @@ class PlanService:
             self._paused = False
             self._cond.notify_all()
 
+    def kill(self) -> None:
+        """Die abruptly, as a crashed process would: workers are deposed
+        mid-flight, unresolved ticket futures never resolve, and the
+        journal keeps every admitted-but-unfinished entry — a new
+        service on the same ``journal_dir`` replays them. The chaos
+        seam's ``"kill"`` fault routes here; safe to call from a worker
+        thread (no joins)."""
+        with self._cond:
+            if self._closed:
+                return
+            self._killed = True
+            self._closed = True
+            for slot in self._slots:
+                slot.generation += 1
+                if slot.token is not None:
+                    slot.token.cancel("service killed")
+            self._cond.notify_all()
+        self._solve_pool.shutdown(wait=False, cancel_futures=True)
+
     def close(self) -> None:
-        """Stop the worker; pending tickets fail with
-        :class:`ServiceClosed` (in-flight batches finish first)."""
+        """Stop gracefully: in-flight batches finish, then pending
+        tickets fail with :class:`ServiceClosed` — a resolution, so
+        their journal entries are erased (a clean close leaves an empty
+        journal; only :meth:`kill` leaves replayable entries)."""
         with self._cond:
             if self._closed:
                 return
             self._closed = True
-            pending = list(self._queue)
+            pending = [t for _, _, t in self._queue if not t.done()]
             self._queue.clear()
             self._cond.notify_all()
-        self._worker.join(timeout=30.0)
+        for slot in self._slots:
+            if slot.thread is not None:
+                slot.thread.join(timeout=30.0)
+        self._supervisor.join(timeout=5.0)
         for t in pending:
             self._reject(t, ServiceClosed("plan service closed before "
                                           "this ticket was served"))

@@ -13,6 +13,27 @@ from repro.core import build_instance, heft_mapping
 from repro.workflows import make_workflow
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--chaos-workers", action="store", type=int, default=1,
+        help="PlanService drain-worker count the chaos suite runs under "
+             "(make test-chaos sweeps 1 and 4)")
+    parser.addoption(
+        "--chaos-seed", action="store", type=int, default=0,
+        help="seed offset for the chaos suite's scenario generators "
+             "(the flake guard repeats the suite across several seeds)")
+
+
+@pytest.fixture
+def chaos_workers(request):
+    return request.config.getoption("--chaos-workers")
+
+
+@pytest.fixture
+def chaos_seed(request):
+    return request.config.getoption("--chaos-seed")
+
+
 @pytest.fixture(scope="session")
 def small_platform():
     return make_cluster(1, seed=0)      # 6 compute processors

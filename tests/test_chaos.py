@@ -34,6 +34,10 @@ from repro.workflows import make_workflow
 
 pytestmark = pytest.mark.chaos
 
+# the suite runs once per worker count: `pytest -m chaos --chaos-workers 4`
+# (make test-chaos sweeps 1 and 4); `--chaos-seed N` offsets the scenario
+# seeds so the flake guard exercises distinct workloads per repetition
+
 
 def _setup(kind="eager", samples=3, seed=3, factor=1.5, scenario="S3"):
     plat = make_cluster(1, seed=seed)
@@ -61,13 +65,13 @@ def _assert_feasible(res, inst, prof):
 
 # --- single-fault ladder walks ---------------------------------------------
 
-def test_persistent_crash_exhausts_retries_then_degrades():
+def test_persistent_crash_exhausts_retries_then_degrades(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="crash", stage="ilp", times=99)])
     with PlanService(planner.clone(), injector=inj, retries=1,
-                     backoff=0.01) as svc:
+                     backoff=0.01, workers=chaos_workers) as svc:
         res = svc.plan(PlanRequest(instances=inst, profiles=prof,
                                    solver="ilp"))
     assert res.degraded and res.fallback_stage == "heuristic"
@@ -77,13 +81,14 @@ def test_persistent_crash_exhausts_retries_then_degrades():
     assert inj.fired == [("crash", "ilp")] * 2
 
 
-def test_hang_trips_watchdog_within_budget():
+def test_hang_trips_watchdog_within_budget(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="hang", stage="heuristic", times=5,
                           seconds=2.0)])
-    with PlanService(planner.clone(), injector=inj) as svc:
+    with PlanService(planner.clone(), injector=inj,
+                     workers=chaos_workers) as svc:
         t0 = time.monotonic()
         res = svc.plan(PlanRequest(instances=inst, profiles=prof),
                        budget=0.3)
@@ -95,12 +100,13 @@ def test_hang_trips_watchdog_within_budget():
     _assert_feasible(res, inst, prof)
 
 
-def test_double_oom_exhausts_blocked_retry_then_degrades():
+def test_double_oom_exhausts_blocked_retry_then_degrades(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="oom", stage="heuristic", times=2)])
-    with PlanService(planner.clone(), injector=inj) as svc:
+    with PlanService(planner.clone(), injector=inj,
+                     workers=chaos_workers) as svc:
         res = svc.plan(PlanRequest(instances=inst, profiles=prof))
         assert svc.stats()["oom_retries"] == 1
     assert res.degraded and res.fallback_stage == "asap"
@@ -110,13 +116,14 @@ def test_double_oom_exhausts_blocked_retry_then_degrades():
     _assert_feasible(res, inst, prof)
 
 
-def test_exact_chain_walks_every_rung():
+def test_exact_chain_walks_every_rung(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="crash", stage="exact", times=9),
                 FaultSpec(kind="crash", stage="ilp", times=9)])
-    with PlanService(planner.clone(), injector=inj, retries=0) as svc:
+    with PlanService(planner.clone(), injector=inj, retries=0,
+                     workers=chaos_workers) as svc:
         res = svc.plan(PlanRequest(instances=inst, profiles=prof,
                                    solver="exact"))
     assert res.degraded and res.fallback_stage == "heuristic"
@@ -124,13 +131,14 @@ def test_exact_chain_walks_every_rung():
     _assert_feasible(res, inst, prof)
 
 
-def test_budget_blown_mid_chain_skips_to_terminal_asap():
+def test_budget_blown_mid_chain_skips_to_terminal_asap(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="hang", stage="exact", times=1,
                           seconds=2.0)])
-    with PlanService(planner.clone(), injector=inj) as svc:
+    with PlanService(planner.clone(), injector=inj,
+                     workers=chaos_workers) as svc:
         res = svc.plan(PlanRequest(instances=inst, profiles=prof,
                                    solver="exact"), budget=0.25)
     assert res.degraded and res.fallback_stage == "asap"
@@ -139,30 +147,32 @@ def test_budget_blown_mid_chain_skips_to_terminal_asap():
     _assert_feasible(res, inst, prof)
 
 
-def test_crash_on_every_stage_is_a_structured_failure():
+def test_crash_on_every_stage_is_a_structured_failure(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="crash", stage=None, times=99)])
     with PlanService(planner.clone(), injector=inj, retries=0,
-                     backoff=0.01) as svc:
+                     backoff=0.01, workers=chaos_workers) as svc:
         with pytest.raises(PlanFailure) as ei:
             svc.plan(PlanRequest(instances=inst, profiles=prof))
         assert svc.stats()["failed"] == 1
     d = ei.value.to_dict()
     assert d["code"] == "plan_failure"
-    assert d["attempts"] == ("heuristic:crash", "asap:crash")
+    # to_dict is the JSON wire shape: tuples travel as lists
+    assert d["attempts"] == ["heuristic:crash", "asap:crash"]
 
 
 # --- quarantine isolation --------------------------------------------------
 
-def test_corrupt_request_is_quarantined_batch_survives():
+def test_corrupt_request_is_quarantined_batch_survives(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="corrupt", times=1)])
-    with PlanService(planner.clone(), injector=inj) as svc:
+    with PlanService(planner.clone(), injector=inj,
+                     workers=chaos_workers) as svc:
         svc.pause()
         t1 = svc.submit(PlanRequest(instances=inst, profiles=prof))
         t2 = svc.submit(PlanRequest(instances=inst, profiles=prof))
@@ -179,7 +189,8 @@ def test_corrupt_request_is_quarantined_batch_survives():
     assert stats["batches"] == 1 and stats["coalesced_requests"] == 2
 
 
-def test_poison_error_bisects_batch_each_ticket_rechains_alone():
+def test_poison_error_bisects_batch_each_ticket_rechains_alone(
+        chaos_workers):
     plat, inst, prof = _setup(samples=2, seed=5)
     wf2 = make_workflow("eager", 2, seed=9)
     plat2 = make_cluster(1, seed=5)
@@ -191,7 +202,8 @@ def test_poison_error_bisects_batch_each_ticket_rechains_alone():
     d2 = planner.plan(PlanRequest(instances=inst2, profiles=prof2))
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="error", stage="heuristic", times=1)])
-    with PlanService(planner.clone(), injector=inj) as svc:
+    with PlanService(planner.clone(), injector=inj,
+                     workers=chaos_workers) as svc:
         svc.pause()
         t1 = svc.submit(PlanRequest(instances=inst, profiles=prof))
         t2 = svc.submit(PlanRequest(instances=inst2, profiles=prof2))
@@ -205,12 +217,14 @@ def test_poison_error_bisects_batch_each_ticket_rechains_alone():
         _assert_same_plan(r, d)
 
 
-def test_persistent_poison_degrades_every_split_ticket_to_asap():
+def test_persistent_poison_degrades_every_split_ticket_to_asap(
+        chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     inj = ServiceFaultInjector(
         faults=[FaultSpec(kind="error", stage="heuristic", times=99)])
-    with PlanService(planner.clone(), injector=inj) as svc:
+    with PlanService(planner.clone(), injector=inj,
+                     workers=chaos_workers) as svc:
         svc.pause()
         tickets = [svc.submit(PlanRequest(instances=inst, profiles=prof))
                    for _ in range(2)]
@@ -225,12 +239,13 @@ def test_persistent_poison_degrades_every_split_ticket_to_asap():
 
 # --- seeded probabilistic sweep --------------------------------------------
 
-def test_seeded_random_crash_sweep_always_yields_feasible_plans():
-    plat, inst, prof = _setup()
+def test_seeded_random_crash_sweep_always_yields_feasible_plans(
+        chaos_workers, chaos_seed):
+    plat, inst, prof = _setup(seed=3 + chaos_seed)
     planner = Planner(plat, engine="numpy")
-    inj = ServiceFaultInjector(prob=0.35, seed=1234)
+    inj = ServiceFaultInjector(prob=0.35, seed=1234 + chaos_seed)
     with PlanService(planner.clone(), injector=inj, retries=3,
-                     backoff=0.01) as svc:
+                     backoff=0.01, workers=chaos_workers) as svc:
         results = [svc.plan(PlanRequest(instances=inst, profiles=prof))
                    for _ in range(6)]
         stats = svc.stats()
@@ -240,10 +255,12 @@ def test_seeded_random_crash_sweep_always_yields_feasible_plans():
         assert res.fallback_stage in ("heuristic", "asap")
         assert res.degraded == (res.fallback_stage != "heuristic")
         _assert_feasible(res, inst, prof)
-    # the sweep is scripted RNG: same seed, same fault sequence
-    inj2 = ServiceFaultInjector(prob=0.35, seed=1234)
+    # the sweep is scripted RNG: same seed, same fault sequence —
+    # reproducible fault-for-fault at any worker count (requests are
+    # submitted one at a time, so claims cannot reorder)
+    inj2 = ServiceFaultInjector(prob=0.35, seed=1234 + chaos_seed)
     with PlanService(planner.clone(), injector=inj2, retries=3,
-                     backoff=0.01) as svc:
+                     backoff=0.01, workers=chaos_workers) as svc:
         results2 = [svc.plan(PlanRequest(instances=inst, profiles=prof))
                     for _ in range(6)]
     assert inj2.fired == inj.fired
@@ -252,9 +269,149 @@ def test_seeded_random_crash_sweep_always_yields_feasible_plans():
         _assert_same_plan(a, b)
 
 
+# --- worker supervision ----------------------------------------------------
+
+def test_worker_death_restarts_and_requeues_tickets(chaos_workers):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="worker-death", times=1)])
+    with PlanService(planner.clone(), injector=inj, workers=chaos_workers,
+                     heartbeat_timeout=0.2) as svc:
+        t = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        res = t.result(timeout=60)       # served by the REPLACEMENT worker
+        stats = svc.stats()
+    _assert_same_plan(res, direct)       # requeue lost no fidelity
+    assert not res.degraded
+    assert stats["worker_restarts"] >= 1
+    assert stats["requeued"] >= 1
+    assert ("worker-death", None) in inj.fired
+
+
+def test_wedged_worker_is_deposed_within_heartbeat_timeout(chaos_workers):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="wedge", times=1, seconds=30.0)])
+    with PlanService(planner.clone(), injector=inj, workers=chaos_workers,
+                     heartbeat_timeout=0.2) as svc:
+        t0 = time.monotonic()
+        t = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        res = t.result(timeout=60)
+        elapsed = time.monotonic() - t0
+        stats = svc.stats()
+    # deposed at ~heartbeat_timeout + served fresh, not after the 30s stall
+    assert elapsed < 10.0, elapsed
+    _assert_same_plan(res, direct)
+    assert not res.degraded
+    assert stats["worker_restarts"] >= 1 and stats["requeued"] >= 1
+
+
+def test_mid_burst_kill_replays_journal_without_losing_tickets(
+        tmp_path, chaos_workers):
+    """The crash-recovery acceptance drill: the service dies mid-burst
+    (first batch claim), the restarted service replays every
+    admitted-but-unfinished ticket from the journal, each resolves at
+    full fidelity, and a third restart finds nothing left (no
+    duplicates, no losses)."""
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    jdir = str(tmp_path / "journal")
+    inj = ServiceFaultInjector(faults=[FaultSpec(kind="kill", times=1)])
+    svc = PlanService(planner.clone(), injector=inj, workers=chaos_workers,
+                      journal_dir=jdir)
+    svc.pause()
+    tickets = [svc.submit(PlanRequest(instances=inst, profiles=prof))
+               for _ in range(5)]
+    svc.resume()                         # first batch claim kills the service
+    deadline = time.monotonic() + 30
+    while not svc._killed and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert svc._killed
+    unresolved = [t for t in tickets if not t.done()]
+    assert len(unresolved) == 5          # killed before anything was served
+    svc2 = PlanService(planner.clone(), workers=chaos_workers,
+                       journal_dir=jdir)
+    assert len(svc2.replayed) == len(unresolved)
+    results = [t.result(timeout=120) for t in svc2.replayed]
+    stats2 = svc2.stats()
+    svc2.close()
+    for res in results:
+        _assert_same_plan(res, direct)   # replay serves full fidelity
+        assert not res.degraded
+    assert stats2["replayed"] == 5 and stats2["completed"] == 5
+    svc3 = PlanService(planner.clone(), workers=chaos_workers,
+                       journal_dir=jdir)
+    assert svc3.replayed == []           # everything resolved exactly once
+    svc3.close()
+
+
+def test_full_fault_matrix_under_worker_pool_always_feasible(
+        chaos_workers, chaos_seed):
+    """Every fault kind at once, against one burst: solver crashes, a
+    hang, a device OOM, a poison error, profile corruption, a worker
+    death, and a wedge — whatever the interleaving under the worker
+    pool, every ticket resolves feasibly or with a structured
+    quarantine, and nothing ends in PlanFailure."""
+    plat, inst, prof = _setup(seed=3 + chaos_seed)
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(faults=[
+        FaultSpec(kind="crash", stage="heuristic", times=2),
+        FaultSpec(kind="hang", stage="heuristic", times=1, seconds=2.0),
+        FaultSpec(kind="oom", stage="heuristic", times=1),
+        FaultSpec(kind="error", stage="heuristic", times=1),
+        FaultSpec(kind="corrupt", times=1),
+        FaultSpec(kind="worker-death", times=1),
+        FaultSpec(kind="wedge", times=1, seconds=30.0),
+    ])
+    with PlanService(planner.clone(), injector=inj, workers=chaos_workers,
+                     heartbeat_timeout=0.25, retries=1, backoff=0.01,
+                     default_budget=2.0) as svc:
+        tickets = [svc.submit(PlanRequest(instances=inst, profiles=prof))
+                   for _ in range(10)]
+        quarantined, served = 0, []
+        for t in tickets:
+            try:
+                served.append(t.result(timeout=120))
+            except InvalidRequest:
+                quarantined += 1         # the corrupted ticket, structured
+        stats = svc.stats()
+    assert quarantined == 1 and len(served) == 9
+    for res in served:
+        _assert_feasible(res, inst, prof)
+    assert stats["failed"] == 0
+
+
+def test_fault_free_multi_worker_bit_identical_to_single_worker():
+    """Worker count is invisible: the same burst under 4 workers and
+    under 1 worker resolves every ticket bit-identically (and equal to
+    direct Planner.plan)."""
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+
+    def burst(workers):
+        with PlanService(planner.clone(), workers=workers) as svc:
+            svc.pause()
+            tickets = [svc.submit(PlanRequest(instances=inst,
+                                              profiles=prof))
+                       for _ in range(6)]
+            svc.resume()
+            return [t.result(timeout=120) for t in tickets]
+
+    multi, solo = burst(4), burst(1)
+    for a, b in zip(multi, solo):
+        _assert_same_plan(a, b)
+        _assert_same_plan(a, direct)
+        assert not a.degraded
+
+
 # --- fault-free control ----------------------------------------------------
 
-def test_fault_free_mixed_workload_bit_identical_to_direct():
+def test_fault_free_mixed_workload_bit_identical_to_direct(chaos_workers):
     plat, inst, prof = _setup()
     planner = Planner(plat, engine="numpy")
     reqs = [
@@ -265,7 +422,7 @@ def test_fault_free_mixed_workload_bit_identical_to_direct():
                     variants=("slack", "pressWR-LS")),
     ]
     direct = [planner.plan(r) for r in reqs]
-    with PlanService(planner.clone()) as svc:
+    with PlanService(planner.clone(), workers=chaos_workers) as svc:
         svc.pause()
         tickets = [svc.submit(r) for r in reqs]
         svc.resume()

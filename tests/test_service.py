@@ -26,8 +26,14 @@ from repro.runtime.fault import FaultSpec, ServiceFaultInjector
 from repro.serve import (
     InvalidRequest,
     Overloaded,
+    PlanFailure,
     PlanService,
     ServiceClosed,
+    ServiceError,
+    TicketCancelled,
+    TicketJournal,
+    decode_ticket,
+    encode_ticket,
 )
 from repro.workflows import make_workflow
 
@@ -214,6 +220,277 @@ def test_service_device_oom_retries_on_blocked_lp_planner():
                             "heuristic:ok")
 
 
+# --- priority admission + aging --------------------------------------------
+
+def _completion_order(named_tickets, timeout=60.0):
+    order, pending = [], dict(named_tickets)
+    deadline = time.monotonic() + timeout
+    while pending and time.monotonic() < deadline:
+        for name, t in list(pending.items()):
+            if t.done():
+                order.append(name)
+                del pending[name]
+        time.sleep(0.005)
+    assert not pending, f"tickets never resolved: {sorted(pending)}"
+    return order
+
+
+def test_priority_admission_serves_earliest_deadline_first():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    with PlanService(planner.clone(), max_batch=1) as svc:
+        svc.pause()
+        # submitted FIRST but budget-less: virtual deadline = now + aging
+        slow = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        urgent = svc.submit(PlanRequest(instances=inst, profiles=prof,
+                                        solver="asap"), budget=10.0)
+        svc.resume()
+        order = _completion_order({"slow": slow, "urgent": urgent})
+    assert order == ["urgent", "slow"]
+
+
+def test_aging_prevents_starvation_of_budgetless_tickets():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    with PlanService(planner.clone(), max_batch=1, aging=0.05) as svc:
+        svc.pause()
+        old = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        time.sleep(0.1)
+        # arrives more than `aging` after `old`: the aged budget-less
+        # ticket now outranks even a tight real deadline
+        urgent = svc.submit(PlanRequest(instances=inst, profiles=prof,
+                                        solver="asap"), budget=10.0)
+        svc.resume()
+        order = _completion_order({"old": old, "urgent": urgent})
+    assert order == ["old", "urgent"]
+
+
+# --- cooperative cancellation ----------------------------------------------
+
+def test_cancel_queued_ticket_never_runs():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    with PlanService(planner.clone()) as svc:
+        svc.pause()
+        t = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        assert t.cancel("changed my mind")
+        assert not t.cancel()                # second cancel lost: resolved
+        svc.resume()
+        with pytest.raises(TicketCancelled) as ei:
+            t.result(timeout=10)
+        assert ei.value.to_dict()["reason"] == "changed my mind"
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+        stats = svc.stats()
+    assert not res.degraded                  # service healthy afterwards
+    assert stats["cancelled"] == 1
+    assert stats["completed"] == 1           # the cancelled ticket never ran
+
+
+def test_cancel_stops_inflight_solve_within_rung_budget():
+    """Tentpole acceptance: cancellation is cooperative all the way down —
+    after Ticket.cancel() the solve pool goes idle within one rung budget
+    (observed via the solver-side token polls), not after the 30s hang."""
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="hang", stage="heuristic", times=1,
+                          seconds=30.0)])
+    with PlanService(planner.clone(), injector=inj) as svc:
+        t = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        deadline = time.monotonic() + 10
+        while svc.stats()["inflight_solves"] == 0 \
+                and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert svc.stats()["inflight_solves"] == 1
+        t0 = time.monotonic()
+        assert t.cancel()
+        while svc.stats()["inflight_solves"] > 0 \
+                and time.monotonic() < deadline:
+            time.sleep(0.005)
+        latency = time.monotonic() - t0
+        stats = svc.stats()
+        with pytest.raises(TicketCancelled):
+            t.result(timeout=5)
+    assert stats["inflight_solves"] == 0
+    assert latency < 2.0, latency            # one rung, not the 30s hang
+    assert stats["cancel_checks"] > 0        # the solver really polled
+    assert stats["cancelled"] == 1 and stats["cancelled_solves"] == 1
+    assert stats["completed"] == 0 and stats["failed"] == 0
+
+
+# --- wire shapes round-trip -------------------------------------------------
+
+def test_service_error_wire_round_trip():
+    import json
+
+    errs = [
+        ServiceError("plain", hint="x"),
+        Overloaded("queue full", queue_depth=3, max_queue=2),
+        InvalidRequest("bad profile", reason="budget length"),
+        PlanFailure("every stage failed",
+                    attempts=("heuristic:crash", "asap:crash"),
+                    last_error=None),
+        ServiceClosed("closed"),
+        TicketCancelled("ticket cancelled: bye", reason="bye"),
+    ]
+    for e in errs:
+        d = e.to_dict()
+        assert d == json.loads(json.dumps(d)), type(e).__name__
+        back = ServiceError.from_dict(d)
+        assert type(back) is type(e)
+        assert str(back) == str(e)
+        assert back.to_dict() == d           # lossless round-trip
+
+
+def test_plan_result_summary_dict_round_trips_losslessly():
+    import dataclasses
+    import json
+
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    res = planner.plan(PlanRequest(instances=inst, profiles=[prof, prof]))
+    gap = np.full(res.costs.shape[:2], np.nan)
+    gap[0, 0] = 0.25                         # mixed known/NaN gap cells
+    res = dataclasses.replace(
+        res, degraded=True, fallback_stage="ilp",
+        attempts=("ilp:timeout", "heuristic:ok"),
+        lower_bound=res.best_costs(), mip_gap=gap)
+    d = res.summary_dict()
+    assert d == json.loads(json.dumps(d))    # JSON-safe, NaN travels as None
+    back = type(res).summary_from_dict(d)
+    assert back.summary_dict() == d          # lossless round-trip
+    assert (back.costs == res.costs).all()
+    assert back.attempts == res.attempts and back.degraded
+    assert np.isnan(back.mip_gap[0, 1]) and back.mip_gap[0, 0] == 0.25
+
+
+# --- write-ahead ticket journal ---------------------------------------------
+
+def test_ticket_journal_round_trips_and_resolves(tmp_path):
+    plat, inst, prof = _setup()
+    j = TicketJournal(str(tmp_path / "journal"))
+    assert j.next_seq() == 0 and j.pending() == []
+    state = encode_ticket([inst], [[prof]], ("asap", "pressWR-LS"),
+                          "heuristic", True, {"x": 1}, 2.5)
+    j.record(j.next_seq(), state)
+    j.record(j.next_seq(), state)
+    pend = j.pending()
+    assert [s for s, _ in pend] == [0, 1] and j.next_seq() == 2
+    insts, grid, names, solver, robust, options, budget = \
+        decode_ticket(pend[0][1])
+    assert names == ("asap", "pressWR-LS") and solver == "heuristic"
+    assert robust is True and options == {"x": 1} and budget == 2.5
+    back = insts[0]
+    assert back.name == inst.name and back.proc_chains == inst.proc_chains
+    for f in ("dur", "proc", "task_work", "pred_ptr", "pred_idx",
+              "succ_ptr", "succ_idx", "chain_proc_ids", "topo", "level"):
+        assert (np.asarray(getattr(back, f))
+                == np.asarray(getattr(inst, f))).all(), f
+    p = grid[0][0]
+    assert (p.bounds == prof.bounds).all() and \
+        (p.budget == prof.budget).all() and p.scenario == prof.scenario
+    j.resolve(0)
+    j.resolve(0)                             # idempotent
+    assert [s for s, _ in j.pending()] == [1]
+
+
+def test_kill_then_restart_replays_admitted_tickets(tmp_path):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    jdir = str(tmp_path / "journal")
+    svc = PlanService(planner.clone(), journal_dir=jdir)
+    svc.pause()
+    t1 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+    t2 = svc.submit(PlanRequest(instances=inst, profiles=prof))
+    svc.kill()                               # abrupt death: futures hang,
+    assert not t1.done() and not t2.done()   # journal keeps both entries
+    svc2 = PlanService(planner.clone(), journal_dir=jdir)
+    assert len(svc2.replayed) == 2
+    results = [t.result(timeout=120) for t in svc2.replayed]
+    assert svc2.stats()["replayed"] == 2
+    svc2.close()
+    for r in results:
+        _assert_same_plan(r, direct)         # replay serves full fidelity
+        assert not r.degraded
+    # every replayed ticket resolved -> the journal is empty again
+    svc3 = PlanService(planner.clone(), journal_dir=jdir)
+    assert svc3.replayed == []
+    svc3.close()
+
+
+def test_clean_close_leaves_empty_journal(tmp_path):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    jdir = str(tmp_path / "journal")
+    with PlanService(planner.clone(), journal_dir=jdir) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+        assert not res.degraded
+    assert TicketJournal(jdir).pending() == []
+
+
+# --- compilation cache wiring ------------------------------------------------
+
+def test_service_enables_compilation_cache_with_opt_out():
+    plat, _, _ = _setup()
+    with PlanService(Planner(plat, engine="numpy")) as svc:
+        assert svc.compile_cache_dir          # enabled by default
+    with PlanService(Planner(plat, engine="numpy"),
+                     compilation_cache=False) as svc:
+        assert svc.compile_cache_dir is None  # explicit opt-out
+
+
+_WARM_RESTART_SCRIPT = """
+from repro.api import Planner, PlanRequest
+from repro.cluster import make_cluster
+from repro.core import (build_instance, deadline_from_asap,
+                        generate_profile, heft_mapping)
+from repro.serve import PlanService
+from repro.workflows import make_workflow
+
+plat = make_cluster(1, seed=3)
+wf = make_workflow("eager", 2, seed=3)
+inst = build_instance(wf, heft_mapping(wf, plat), plat)
+prof = generate_profile("S3", deadline_from_asap(inst, 1.5), plat, J=8,
+                        seed=3)
+svc = PlanService(Planner(plat, engine="jax"))
+assert svc.compile_cache_dir, "compilation cache not enabled"
+res = svc.plan(PlanRequest(instances=inst, profiles=[prof, prof]))
+assert not res.degraded
+svc.close()
+print("CACHE_DIR=" + svc.compile_cache_dir)
+"""
+
+
+@pytest.mark.device
+def test_service_restart_reuses_persistent_compilation_cache(tmp_path):
+    """Warm-restart compiles drop to zero: the first service process
+    populates the persistent jax compilation cache the startup hook
+    enables; an identical second process adds no new entries (every
+    compile is a cache hit)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ, HOME=str(tmp_path),
+               PYTHONPATH=os.pathsep.join(sys.path))
+    cache_dir = None
+    counts = []
+    for _ in range(2):
+        out = subprocess.run(
+            [sys.executable, "-c", _WARM_RESTART_SCRIPT], env=env,
+            capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("CACHE_DIR=")][0]
+        cache_dir = line[len("CACHE_DIR="):]
+        counts.append(len(os.listdir(cache_dir)))
+    assert cache_dir.startswith(str(tmp_path))
+    assert counts[0] > 0, "cold run persisted no compiled executables"
+    assert counts[1] == counts[0], \
+        f"warm restart recompiled: {counts[0]} -> {counts[1]} entries"
+
+
 # --- resolved-grid validation (the quarantine check) -----------------------
 
 def test_validate_resolved_catches_structural_corruption():
@@ -250,7 +527,8 @@ def test_ilp_time_limit_exit_surfaces_gap_not_failure(monkeypatch):
     incumbent = asap.result(variant="asap").start
     cost = int(asap.costs[0, 0, 0])
 
-    def fake_solve(inst_, prof_, time_limit=300.0, mip_gap=0.0):
+    def fake_solve(inst_, prof_, time_limit=300.0, mip_gap=0.0,
+                   cancel=None):
         return ILPResult(cost=float(cost), start=incumbent.copy(),
                          status=1, message="time limit reached",
                          lower_bound=cost * 0.5, mip_gap=0.5)
@@ -317,7 +595,7 @@ def test_session_evicts_failed_future_and_resubmits_once():
     real_plan = planner.plan
     boom = {"left": 1}
 
-    def flaky_plan(request):
+    def flaky_plan(request, cancel=None):
         if boom["left"]:
             boom["left"] -= 1
             raise RuntimeError("transient device hiccup")
@@ -336,7 +614,7 @@ def test_session_second_failure_propagates_and_sticks():
     plat, inst, wprofs = _session_fixture()
     planner = Planner(plat, engine="numpy")
 
-    def always_fail(request):
+    def always_fail(request, cancel=None):
         raise RuntimeError("persistent failure")
 
     planner.plan = always_fail
@@ -353,9 +631,9 @@ def test_session_close_cancels_prefetched_windows():
     planner = Planner(plat, engine="numpy")
     real_plan = planner.plan
 
-    def slow_plan(request):
+    def slow_plan(request, cancel=None):
         time.sleep(0.25)
-        return real_plan(request)
+        return real_plan(request, cancel=cancel)
 
     planner.plan = slow_plan
     sess = PlanningSession(planner, inst, wprofs, n_windows=8, lookahead=6)
@@ -367,3 +645,27 @@ def test_session_close_cancels_prefetched_windows():
     assert closed_in < 1.5, closed_in
     with pytest.raises(RuntimeError):
         sess.plan_for(1)
+
+
+def test_session_close_cancels_in_flight_solve_via_token():
+    """close() stops the ONE in-flight background solve through its
+    CancelToken, not just the queued prefetches — an endless solve that
+    polls its token unwinds within a chunk instead of pinning close()."""
+    plat, inst, wprofs = _session_fixture()
+    planner = Planner(plat, engine="numpy")
+
+    def endless_plan(request, cancel=None):
+        while True:                      # a solver chunk loop in miniature
+            if cancel is not None:
+                cancel.check()
+            time.sleep(0.01)
+
+    planner.plan = endless_plan
+    sess = PlanningSession(planner, inst, wprofs, n_windows=3, lookahead=0)
+    sess._submit(0)                      # in flight, would never finish
+    time.sleep(0.1)
+    t0 = time.monotonic()
+    sess.close()                         # shutdown(wait=True) + token cancel
+    assert time.monotonic() - t0 < 1.0
+    with pytest.raises(RuntimeError):
+        sess.plan_for(0)
