@@ -1,14 +1,15 @@
 # Tier-1: the correctness gate — must stay NO WORSE than the seed
-# baseline (tests/test_dryrun_machinery.py and tests/test_pipeline.py fail
-# since the seed commit: the installed jax lacks `jax.lax.axis_size` /
-# changed `cost_analysis()`; everything else must pass).
+# baseline. (The two seed-era failures — tests/test_pipeline.py and
+# tests/test_dryrun_machinery.py tripping over `jax.lax.axis_size` /
+# list-valued `cost_analysis()` API drift — were fixed in PR 8; the
+# whole suite is expected green.)
 # Tier-2: cheap perf smoke for PRs touching the hot paths — refreshes
 # benchmarks/out/BENCH_portfolio.json on a tiny matrix in <60s.
 
 PY := PYTHONPATH=src python
 
 .PHONY: test test-device test-host test-exact test-big test-chaos \
-	test-chaos-flake bench bench-smoke planner-smoke verify
+	test-chaos-flake test-obs bench bench-smoke planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,6 +49,11 @@ test-chaos-flake:
 	    --chaos-seed $$seed || exit 1; \
 	done
 
+# observability subsystem: tracing/metrics primitives, the service's
+# registry-backed stats(), Prometheus exposition, journal compaction
+test-obs:
+	$(PY) -m pytest -x -q tests/test_obs.py
+
 bench:
 	$(PY) -m benchmarks.run --only portfolio
 
@@ -58,6 +64,6 @@ planner-smoke:
 	$(PY) -c "from repro.api import LocalSearchConfig, Planner, \
 	PlanRequest, PlanResult, PlanningSession; print('planner api: ok')"
 
-# the PR gate: tier-1 tests + chaos drills + Planner import smoke +
-# tier-2 bench refresh
-verify: test test-chaos planner-smoke bench-smoke
+# the PR gate: tier-1 tests + chaos drills + observability suite +
+# Planner import smoke + tier-2 bench refresh
+verify: test test-chaos test-obs planner-smoke bench-smoke

@@ -32,6 +32,11 @@ Emits ``benchmarks/out/BENCH_portfolio.json``:
     1 vs 4 drain workers) and the cooperative-cancellation latency (time
     for the pool to go idle after ``Ticket.cancel`` lands on a wedged
     solve);
+  * ``obs`` — observability overhead, measured: disabled-tracer hot-path
+    cost per ``obs.span`` call, spans-per-plan and the enabled-tracer
+    wall clock on the same steady-state fan-out, the
+    ``disabled_tracer_overhead_frac`` acceptance number (asserted < 2%),
+    and the jax hook snapshot (compile events, jit cache entries);
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -371,6 +376,73 @@ def _service_section(cases) -> dict:
     }
 
 
+def _obs_section(cases, with_jax: bool) -> dict:
+    """Observability overhead, measured: the disabled-tracer hot-path
+    cost (one global read + identity check per ``obs.span`` call), the
+    span volume and wall-clock of the same steady-state fan-out with a
+    live tracer, and the jax runtime hook snapshot (compile events,
+    per-launcher jit cache entries, live arrays).
+
+    ``disabled_tracer_overhead_frac`` is the acceptance number: the
+    measured per-call disabled cost times the spans the plan would have
+    emitted, as a fraction of the disabled-path plan time — asserted
+    under 2% (spans are placed at launch/chunk granularity, never
+    per-task, so the real figure is orders of magnitude below)."""
+    import timeit
+
+    from repro import obs
+    from repro.obs import jax_hooks
+
+    jax_hooks.install(obs.registry())
+    c = cases[0]
+    engine = "jax" if with_jax else "numpy"
+
+    # the disabled span call, isolated: subtract the bare-lambda floor
+    n = 200_000
+    t_span = timeit.timeit(lambda: obs.span("x"), number=n) / n
+    t_base = timeit.timeit(lambda: None, number=n) / n
+    null_span_ns = max(t_span - t_base, 0.0) * 1e9
+
+    run_all_variants(c, engine=engine)           # warm caches/executables
+    reps = 7
+    prev = obs.set_tracer(None)
+    try:
+        t_dis = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_all_variants(c, engine=engine)
+            t_dis.append(time.perf_counter() - t0)
+        t_disabled = float(np.median(t_dis))
+
+        tr = obs.Tracer()
+        obs.set_tracer(tr)
+        t_en = []
+        for _ in range(reps):
+            tr.clear()
+            t0 = time.perf_counter()
+            run_all_variants(c, engine=engine)
+            t_en.append(time.perf_counter() - t0)
+        t_enabled = float(np.median(t_en))
+        spans_per_plan = len(tr.finished())
+    finally:
+        obs.set_tracer(prev)
+
+    overhead = spans_per_plan * null_span_ns * 1e-9 / t_disabled
+    assert overhead < 0.02, (overhead, spans_per_plan, null_span_ns)
+
+    return {
+        "case": c.name,
+        "engine": engine,
+        "null_span_ns": null_span_ns,
+        "spans_per_plan": spans_per_plan,
+        "steady_plan_us_disabled": t_disabled * 1e6,
+        "steady_plan_us_enabled": t_enabled * 1e6,
+        "disabled_tracer_overhead_frac": overhead,
+        "enabled_tracer_overhead_frac": t_enabled / t_disabled - 1.0,
+        "jax": jax_hooks.snapshot(obs.registry()),
+    }
+
+
 def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         with_jax: bool = True, n_profiles: int = 8,
         gap_time_limit: float = 20.0):
@@ -516,6 +588,8 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
 
     service = _service_section(cases)
 
+    obs_stats = _obs_section(cases, with_jax=with_jax)
+
     gaps = _gap_table(gap_time_limit)
 
     n = len(cases)
@@ -539,6 +613,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         "planner": planner_stats,
         "lp_blocked": lp_blocked,
         "service": service,
+        "obs": obs_stats,
         "gaps": gaps,
         "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
@@ -579,6 +654,12 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
          f";burst={ws['burst']}"
          f";cancel_ms={service['cancel_latency_ms']:.1f}"
          f";cancel_checks={service['cancel_checks']}")
+    emit("planner_obs", obs_stats["null_span_ns"],
+         f"disabled_overhead="
+         f"{obs_stats['disabled_tracer_overhead_frac'] * 100:.4f}%"
+         f";spans_per_plan={obs_stats['spans_per_plan']}"
+         f";enabled_overhead="
+         f"{obs_stats['enabled_tracer_overhead_frac'] * 100:.1f}%")
     for gc in gaps["cases"]:
         asap_s = ("n/a" if gc["gap_asap"] is None
                   else f"{gc['gap_asap']:.3f}")

@@ -6,6 +6,12 @@ fixed-mapping workflow), and one ``Planner.plan`` call places them inside
 the site's green windows (simulated — the demo prints the admission plan
 and then serves immediately).
 
+The admission planning runs with tracing enabled: the coalesced burst
+plus one forced degradation (a zero-budget request that walks the
+fallback ladder down to ``asap``) produce a span trace that is dumped as
+Chrome trace_event JSONL — load it line by line, or wrap in ``[...]``
+for ``chrome://tracing`` / Perfetto.
+
     PYTHONPATH=src python examples/serve_batched.py --requests 12 --slots 4
 """
 from __future__ import annotations
@@ -17,6 +23,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.api import Planner, PlanRequest
 from repro.configs import ARCHS, reduced
 from repro.core import generate_profile
@@ -25,9 +32,12 @@ from repro.models import build_model, param_count
 from repro.serve import ContinuousBatcher, PlanService, Request
 
 
-def carbon_admission_plan(n_requests: int, slots: int, est_chunk_s: int = 5):
+def carbon_admission_plan(n_requests: int, slots: int, est_chunk_s: int = 5,
+                          trace_out: str = "serve_trace.jsonl"):
     """Green-window admission plan of the decode backlog (one chain of
-    per-batch decode chunks on a 1-pod serving platform)."""
+    per-batch decode chunks on a 1-pod serving platform), traced: a
+    coalesced 3-caller burst plus one zero-budget request forced down
+    the fallback ladder, dumped to ``trace_out`` as JSONL."""
     from repro.runtime.carbon_gate import chunk_workflow, fleet_platform
 
     plat = fleet_platform(pods=1, chip_watts_idle=40, chip_watts_work=120,
@@ -39,12 +49,21 @@ def carbon_admission_plan(n_requests: int, slots: int, est_chunk_s: int = 5):
     horizon = 3 * n_chunks * est_chunk_s
     profile = generate_profile("S1", horizon, plat, J=12, seed=4,
                                work_capacity=int(plat.p_work[0]))
+    tracer, _ = obs.configure(tracing=True)
     # plan through the resilient serving tier: a blown budget degrades to
     # a feasible asap plan instead of failing admission
     with PlanService(Planner(plat), default_budget=10.0) as svc:
-        res = svc.plan(PlanRequest(
-            instances=inst, profiles=profile,
-            variants=("asap", "pressWR-LS")))
+        req = PlanRequest(instances=inst, profiles=profile,
+                          variants=("asap", "pressWR-LS"))
+        svc.pause()                    # let the burst pile up: coalesce
+        burst = [svc.submit(req) for _ in range(3)]
+        svc.resume()
+        res = [t.result(timeout=120) for t in burst][0]
+        # forced degradation: no budget left => skip straight to asap
+        degraded = svc.plan(req, budget=0.0)
+        stats = svc.stats()
+    n_events = tracer.dump_jsonl(trace_out)
+    obs.set_tracer(None)
     plan = res.result(variant="pressWR-LS" if "pressWR-LS" in res.variants
                       else res.variants[-1])
     asap = res.result(variant="asap")
@@ -55,6 +74,14 @@ def carbon_admission_plan(n_requests: int, slots: int, est_chunk_s: int = 5):
           f"({plan.cost / max(asap.cost, 1):.2f}x, {state}); chunk starts "
           f"{[int(s) for s in plan.start[:8]]}"
           f"{'...' if len(plan.start) > 8 else ''} (simulated)")
+    rungs = [s for s in tracer.finished() if s.name.startswith("rung:")]
+    walk = ", ".join(f"{s.name.split(':', 1)[1]}:"
+                     f"{s.attrs.get('outcome')} {s.duration * 1e3:.1f}ms"
+                     for s in sorted(rungs, key=lambda s: s.t0))
+    print(f"  coalesced {stats['coalesced_requests']} requests into "
+          f"{stats['batches']} launches; forced degradation served by "
+          f"{degraded.fallback_stage} ({', '.join(degraded.attempts)})")
+    print(f"  trace: {n_events} spans -> {trace_out} (rungs: {walk})")
 
 
 def main():
@@ -63,9 +90,13 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--trace-out", default="serve_trace.jsonl",
+                    help="where the admission-planning span trace lands "
+                         "(Chrome trace_event JSONL)")
     args = ap.parse_args()
 
-    carbon_admission_plan(args.requests, args.slots)
+    carbon_admission_plan(args.requests, args.slots,
+                          trace_out=args.trace_out)
 
     cfg = dataclasses.replace(reduced(ARCHS[args.arch]), dtype="float32")
     model = build_model(cfg, tp=16)

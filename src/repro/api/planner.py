@@ -35,6 +35,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.api.request import LocalSearchConfig, PlanRequest
 from repro.api.result import PlanResult
 from repro.core.portfolio import PreparedGraph, prepare_graph
@@ -111,9 +112,19 @@ class Planner:
             g = self._graphs.get(key)
             if g is not None and g.inst is inst:
                 self._graphs.move_to_end(key)
+                obs.registry().counter(
+                    "planner_graph_cache_total",
+                    "PreparedGraph cache lookups", labels=("outcome",)
+                ).inc(outcome="hit")
                 return g
-        g = prepare_graph(inst, self.platform, int(T), k=self.k,
-                          lp_budget_bytes=self.lp_budget_bytes)
+        with obs.span("prepare_graph", N=int(getattr(inst, "N", 0)),
+                      T=int(T), cache_hit=False):
+            g = prepare_graph(inst, self.platform, int(T), k=self.k,
+                              lp_budget_bytes=self.lp_budget_bytes)
+        obs.registry().counter(
+            "planner_graph_cache_total",
+            "PreparedGraph cache lookups", labels=("outcome",)
+        ).inc(outcome="miss")
         self.seed_graph(g)
         return g
 
@@ -154,15 +165,26 @@ class Planner:
         # solvers pay for (and cache) the PreparedGraph precompute
         engine = resolve_engine(self.engine, fanout=I * P) \
             if solver.name == "heuristic" else "numpy"
-        graphs = [self.prepared(inst, ps[0].T)
-                  for inst, ps in zip(instances, grid)] \
-            if solver.uses_graphs else None
-        out = solver.solve_grid(
-            instances, grid, self.platform, names, k=self.k,
-            mu=self.ls.mu, validate=self.validate, engine=engine,
-            graphs=graphs, commit_k=self.ls.commit_k,
-            ls_max_rounds=self.ls.max_rounds,
-            options=request.solver_options, cancel=cancel)
+        with obs.span("plan", solver=solver.name, engine=engine,
+                      instances=I, profiles=P, variants=len(names)):
+            graphs = [self.prepared(inst, ps[0].T)
+                      for inst, ps in zip(instances, grid)] \
+                if solver.uses_graphs else None
+            out = solver.solve_grid(
+                instances, grid, self.platform, names, k=self.k,
+                mu=self.ls.mu, validate=self.validate, engine=engine,
+                graphs=graphs, commit_k=self.ls.commit_k,
+                ls_max_rounds=self.ls.max_rounds,
+                options=request.solver_options, cancel=cancel)
+        obs.registry().counter(
+            "planner_plans_total", "Planner.plan calls served",
+            labels=("solver", "engine")).inc(solver=solver.name,
+                                             engine=engine)
+        obs.registry().histogram(
+            "planner_plan_seconds", "wall time of Planner.plan",
+            labels=("solver", "engine"), reservoir=256,
+        ).observe(time.perf_counter() - t0, solver=solver.name,
+                  engine=engine)
         cells = out.cells
         costs = np.array(
             [[[cells[i][p][n].cost for n in names] for p in range(P)]

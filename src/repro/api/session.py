@@ -20,8 +20,14 @@ from __future__ import annotations
 
 import concurrent.futures as _fut
 
+from repro import obs
 from repro.api.request import PlanRequest
 from repro.core.cancel import Cancelled, CancelToken
+
+_WINDOW_FETCH = obs.registry().counter(
+    "session_window_fetch_total",
+    "plan_for() outcomes: prefetched = plan already done, waited = the "
+    "caller blocked on the background worker", labels=("outcome",))
 
 
 class PlanningSession:
@@ -87,8 +93,17 @@ class PlanningSession:
             # can stop the ONE in-flight solve, not just the queue
             token = CancelToken()
             self._tokens[window] = token
-            self._plans[window] = self._pool.submit(
-                self.planner.plan, self.request_for(window), cancel=token)
+
+            def _plan(window=window, token=token,
+                      parent=obs.current_span()):
+                # re-anchor the worker thread to the caller's span (the
+                # context variable does not cross pool submission)
+                with obs.attach(parent):
+                    with obs.span("session_window", window=window):
+                        return self.planner.plan(self.request_for(window),
+                                                 cancel=token)
+
+            self._plans[window] = self._pool.submit(_plan)
 
     def plan_for(self, window: int):
         """Window ``window``'s :class:`PlanResult`; blocks only when its
@@ -109,6 +124,8 @@ class PlanningSession:
         self._submit(window)
         for nxt in range(window + 1, window + 1 + self.lookahead):
             self._submit(nxt)
+        _WINDOW_FETCH.inc(outcome="prefetched"
+                          if self._plans[window].done() else "waited")
         try:
             return self._plans[window].result()
         except (_fut.CancelledError, Cancelled):

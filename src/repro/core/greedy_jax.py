@@ -65,6 +65,7 @@ import functools
 
 import numpy as np
 
+from repro import obs
 from repro.cluster import Platform
 from repro.core.carbon import PowerProfile
 from repro.core.dag import Instance
@@ -402,11 +403,18 @@ def _blocked_fanout_padded(dur, work, blp: BlockedLP, budgets, masks,
     )
     impl = _blocked_impl()["multi"]
     dur_j, work_j = jnp.asarray(dur), jnp.asarray(work)
-    for c in range(0, Np, B):
-        vs = orders[:, c:c + B]
-        rows, cols = blp.chunk_tensors(vs, Np)
-        state = impl(dur_j, work_j, *state, jnp.asarray(vs),
-                     jnp.asarray(rows), jnp.asarray(cols))
+    n_chunks = -(-Np // B)
+    with obs.span("blocked_chunk_sweep", N=int(Np), chunk_width=int(B),
+                  chunks=n_chunks, rows=int(P * V)):
+        for c in range(0, Np, B):
+            vs = orders[:, c:c + B]
+            rows, cols = blp.chunk_tensors(vs, Np)
+            state = impl(dur_j, work_j, *state, jnp.asarray(vs),
+                         jnp.asarray(rows), jnp.asarray(cols))
+    obs.registry().counter(
+        "blocked_lp_chunks_total",
+        "device chunk launches of the blocked longest-path sweep"
+    ).inc(n_chunks)
     return np.asarray(state[4])
 
 

@@ -29,6 +29,7 @@ import functools
 
 import numpy as np
 
+from repro import obs
 from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile, work_timeline
 from repro.core.dag import Instance
@@ -234,7 +235,10 @@ def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K,
 
         state = (rem, start, jnp.int32(0), jnp.bool_(True))
         state = lax.while_loop(cond, round_body, state)
-        return state[1]
+        # (starts, rounds): the round count is the climb's own
+        # observability signal (obs `ls_device_rounds`), surfaced from the
+        # device loop at no extra sync — the arrays come back together
+        return state[1], state[2]
 
     rows = jax.vmap(climb_row,
                     in_axes=(0, 0, None, None, None, None, None))
@@ -389,24 +393,41 @@ def local_search_portfolio_multi(inst: Instance, T: int,
         adj_args = (jnp.asarray(pred_p), jnp.asarray(succ_p))
 
     checkpoint(cancel)                   # last rung before the device climb
-    climbed = np.asarray(_climb_impl(
-        mu, max_rounds, _COMMIT_K if commit_k is None else int(commit_k),
-        padded)(
-        jnp.asarray(rem_p), jnp.asarray(start_p), jnp.int32(T),
-        jnp.asarray(dur_p), jnp.asarray(work_p), *adj_args))
+    ck = _COMMIT_K if commit_k is None else int(commit_k)
+    with obs.span("ls_device_climb", rows=int(R), N=int(N), T=int(T),
+                  commit_k=ck, padded=padded) as climb_span:
+        climbed, rounds_dev = _climb_impl(mu, max_rounds, ck, padded)(
+            jnp.asarray(rem_p), jnp.asarray(start_p), jnp.int32(T),
+            jnp.asarray(dur_p), jnp.asarray(work_p), *adj_args)
+        climbed = np.asarray(climbed)
+        rounds_dev = np.asarray(rounds_dev)[:R]
+        climb_span.set(rounds_max=int(rounds_dev.max(initial=0)))
+    rounds_hist = obs.registry().histogram(
+        "ls_device_rounds", "device while_loop rounds per climb row",
+        buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256), reservoir=256)
+    for r in rounds_dev:
+        rounds_hist.observe(int(r))
     starts = climbed[:R, :N].astype(np.int64)
 
     if polish:
         pad = mu
-        for i in range(R):
-            rem_pad = np.zeros(T + 2 * pad, dtype=np.int64)
-            rem_pad[pad:pad + T] = unit_budgets[i] - work_timeline(
-                inst, T, starts[i])
-            budget = max_rounds                   # per-variant round budget
-            while budget > 0 and reference_round(inst, T, rem_pad, pad,
-                                                 starts[i], mu, ctx):
-                budget -= 1
-                checkpoint(cancel)       # per-polish-round rung
+        polish_rounds = 0
+        with obs.span("ls_polish", rows=int(R)) as polish_span:
+            for i in range(R):
+                rem_pad = np.zeros(T + 2 * pad, dtype=np.int64)
+                rem_pad[pad:pad + T] = unit_budgets[i] - work_timeline(
+                    inst, T, starts[i])
+                budget = max_rounds               # per-variant round budget
+                while budget > 0 and reference_round(inst, T, rem_pad, pad,
+                                                     starts[i], mu, ctx):
+                    budget -= 1
+                    polish_rounds += 1
+                    checkpoint(cancel)   # per-polish-round rung
+            polish_span.set(rounds=polish_rounds)
+        obs.registry().counter(
+            "ls_polish_rounds_total",
+            "sequential-reference polish rounds run after device climbs"
+        ).inc(polish_rounds)
     return starts
 
 

@@ -58,6 +58,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.cluster import Platform
 from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile, schedule_cost, validate_schedule
@@ -277,6 +278,14 @@ def _greedy_starts_numpy(prep: PreparedInstance, combos) -> dict:
     return out
 
 
+def _jit_entries_total() -> int:
+    """Total compiled signatures across the engine's jit launchers —
+    sampled before/after a bucket launch, the delta IS the retrace count
+    the bench used to assert by hand."""
+    from repro.obs import jax_hooks
+    return sum(jax_hooks.jit_cache_entries().values())
+
+
 def _needed_combos(names) -> list[tuple[str, bool, bool]]:
     need = []
     for name in names:
@@ -412,12 +421,13 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     # --- greedy: all (instance, profile, unique-combo) starts -------------
     greedys: list[list[dict]] = [[{} for _ in range(P)] for _ in range(I)]
     if need and engine == "numpy":
-        for i in range(I):
-            for p in range(P):
-                checkpoint(cancel)       # per-cell cancellation rung
-                prep = PreparedInstance(graph=graphs[i],
-                                        overlay=overlays[i][p])
-                greedys[i][p] = _greedy_starts_numpy(prep, need)
+        with obs.span("greedy_numpy", cells=I * P, combos=len(need)):
+            for i in range(I):
+                for p in range(P):
+                    checkpoint(cancel)   # per-cell cancellation rung
+                    prep = PreparedInstance(graph=graphs[i],
+                                            overlay=overlays[i][p])
+                    greedys[i][p] = _greedy_starts_numpy(prep, need)
     elif need:                                     # engine == "jax"
         from repro.core.greedy_jax import greedy_fanout_grid_jax, \
             pad_budget, pad_dims, pad_masks, pad_orders
@@ -425,9 +435,13 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
         buckets: dict[tuple, list[int]] = {}
         for i, (inst, g) in enumerate(zip(instances, graphs)):
             buckets.setdefault(pad_dims(inst.num_tasks, g.T), []).append(i)
-        for (_, Tp), idx in buckets.items():
+        for (Npad, Tp), idx in buckets.items():
             checkpoint(cancel)           # per-bucket-launch rung
             t0 = time.perf_counter()
+            launch_span = obs.start_span(
+                "bucket_launch", bucket=f"{Npad}x{Tp}",
+                instances=len(idx), rows=len(idx) * P * len(need))
+            misses0 = _jit_entries_total()
             rows = []
             for i in idx:
                 g = graphs[i]
@@ -441,8 +455,19 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                     [g.order_for(s, w) for (s, w, _) in need]), tail)
                 rows.append((dur, work, lp, budgets, masks,
                              est_j, lst_j, orders))
-            starts = np.asarray(greedy_fanout_grid_jax(rows),
-                                dtype=np.int64)
+            try:
+                starts = np.asarray(greedy_fanout_grid_jax(rows),
+                                    dtype=np.int64)
+            finally:
+                misses = max(_jit_entries_total() - misses0, 0)
+                if misses:
+                    obs.registry().counter(
+                        "jax_jit_cache_misses_total",
+                        "new compiled signatures per fan-out bucket "
+                        "launch (steady state stays at 0)",
+                        labels=("bucket",)).inc(misses,
+                                                bucket=f"{Npad}x{Tp}")
+                launch_span.end(cache_misses=misses)
             dt = (time.perf_counter() - t0) / (len(idx) * P * len(need))
             for b, i in enumerate(idx):
                 N = instances[i].num_tasks
@@ -479,17 +504,23 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
             # climb survives across profiles (the overlay's ls dict is a
             # per-profile copy); blocked-lp instances use the padded-CSR
             # adjacency so the climb holds no dense N x N tensor either
-            improved = local_search_portfolio_multi(
-                instances[i], graphs[i].T, row_budgets, rows, mu=mu,
-                max_rounds=ls_max_rounds, ctx=graphs[i].ls_graph,
-                commit_k=ck,
-                adjacency="padded" if graphs[i].lp_is_blocked else "dense",
-                cancel=cancel)
+            with obs.span("ls_climb", instance=i, rows=len(rows)):
+                improved = local_search_portfolio_multi(
+                    instances[i], graphs[i].T, row_budgets, rows, mu=mu,
+                    max_rounds=ls_max_rounds, ctx=graphs[i].ls_graph,
+                    commit_k=ck,
+                    adjacency="padded" if graphs[i].lp_is_blocked
+                    else "dense",
+                    cancel=cancel)
             dt = (time.perf_counter() - t0) / len(rows)
             for p in range(P):
                 ls_dones[i][p] = {n: (improved[p * len(keys) + j], dt)
                                   for j, n in enumerate(ls_names)}
 
+    obs.registry().counter(
+        "portfolio_cells_total",
+        "grid cells served by the portfolio pass, by engine",
+        labels=("engine",)).inc(I * P, engine=engine)
     return [[_assemble(names,
                        PreparedInstance(graph=graphs[i],
                                         overlay=overlays[i][p]),

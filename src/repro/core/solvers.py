@@ -39,6 +39,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.cancel import checkpoint
 from repro.core.carbon import PowerProfile, schedule_cost, validate_schedule
 from repro.core.cawosched import ScheduleResult
@@ -119,7 +120,9 @@ class Solver:
             for p, profile in enumerate(profile_grid[i]):
                 checkpoint(cancel)        # per-cell cancellation rung
                 t0 = time.perf_counter()
-                out = cell_fn(i, inst, profile)
+                with obs.span("solve_cell", solver=self.name, i=i, p=p):
+                    out = cell_fn(i, inst, profile)
+                _CELLS.inc(solver=self.name)
                 start, lb = out[0], out[1]
                 gap = out[2] if len(out) > 2 else None
                 secs = time.perf_counter() - t0
@@ -139,6 +142,11 @@ class Solver:
         return SolveOutput(cells=cells,
                            lower=lower if any_lower else None,
                            mip_gap=gaps if any_gap else None)
+
+
+_CELLS = obs.registry().counter(
+    "solver_cells_total", "grid cells served, by solver backend",
+    labels=("solver",))
 
 
 def _single_label(names, solver: Solver) -> str:

@@ -34,6 +34,7 @@ import shutil
 
 import numpy as np
 
+from repro import obs
 from repro.core.carbon import PowerProfile
 from repro.core.dag import Instance
 
@@ -149,15 +150,25 @@ class TicketJournal:
         if os.path.isdir(path):
             shutil.rmtree(path)
 
-    def pending(self) -> list[tuple[int, dict]]:
+    def pending(self, limit: int | None = None
+                ) -> list[tuple[int, dict]]:
         """Every admitted-but-unresolved entry as ``(seq, state)``, in
         admission order — what a restarted service replays. Torn or
         unreadable entries are dropped (the atomic-rename write makes
-        them impossible short of manual tampering)."""
+        them impossible short of manual tampering).
+
+        ``limit`` caps the replay size: only the ``limit`` *oldest* live
+        entries are loaded (admission order = fairness order); entries
+        past the cap stay on disk untouched, so a later replay — or an
+        operator — can still recover them.
+        """
         from repro.checkpoint.ckpt import load_checkpoint
 
         out = []
-        for seq in self._seqs():
+        seqs = self._seqs()
+        if limit is not None:
+            seqs = seqs[:max(int(limit), 0)]
+        for seq in seqs:
             try:
                 state, step = load_checkpoint(self._path(seq))
             except Exception:
@@ -165,3 +176,47 @@ class TicketJournal:
                 continue
             out.append((int(step), state))
         return out
+
+    def __len__(self) -> int:
+        return len(self._seqs())
+
+    def compact(self) -> dict[int, int]:
+        """Renumber live entries to dense sequences ``0..k-1``.
+
+        Long-running services only ever *grow* sequence numbers — resolve
+        deletes entries but never reclaims the numbering, so a fleet
+        restarting from a sparse journal keeps counting from the
+        high-water mark forever. Compaction rewrites each surviving entry
+        under its rank (oldest first) and removes the original, returning
+        the ``{old_seq: new_seq}`` mapping so a replaying service can
+        re-key its in-memory tickets.
+
+        Crash safety: the new entry is written (atomic rename) BEFORE the
+        old one is removed, and ranks never collide with still-unprocessed
+        originals (``new <= old`` throughout), so a mid-compact crash
+        leaves at worst a duplicate entry — an at-least-once replay, the
+        journal's existing contract — never a lost ticket.
+        """
+        from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+
+        mapping: dict[int, int] = {}
+        moved = 0
+        with obs.span("journal_compact", directory=self.directory):
+            for new, old in enumerate(self._seqs()):
+                mapping[old] = new
+                if new == old:
+                    continue
+                try:
+                    state, _ = load_checkpoint(self._path(old))
+                except Exception:
+                    shutil.rmtree(self._path(old), ignore_errors=True)
+                    del mapping[old]
+                    continue
+                save_checkpoint(state, new, self.directory)
+                shutil.rmtree(self._path(old), ignore_errors=True)
+                moved += 1
+        if moved:
+            obs.registry().counter(
+                "journal_compacted_entries_total",
+                "journal entries renumbered by compaction").inc(moved)
+        return mapping

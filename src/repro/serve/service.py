@@ -86,7 +86,6 @@ can *always* emit some feasible schedule before the deadline.
 """
 from __future__ import annotations
 
-import collections
 import concurrent.futures as _fut
 import heapq
 import itertools
@@ -95,6 +94,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.api.planner import Planner
 from repro.api.request import PlanRequest, validate_resolved
 from repro.api.result import PlanResult
@@ -114,6 +114,18 @@ FALLBACK_CHAINS: dict[str, tuple[str, ...]] = {
     "heuristic": ("heuristic", "asap"),
     "asap": ("asap",),
 }
+
+# Every event-style counter the service tracks; stats() reads these out
+# of the per-service metrics registry under the same wire keys the
+# pre-registry Counter dict used. inflight_solves and max_queue_depth
+# are gauges and handled separately.
+_STAT_EVENTS = (
+    "submitted", "completed", "failed", "degraded", "rejected_overloaded",
+    "rejected_invalid", "quarantined", "splits", "retries", "oom_retries",
+    "timeouts", "cancelled", "cancelled_solves", "worker_restarts",
+    "requeued", "replayed", "replay_corrupt", "replay_deferred",
+    "priority_inversions", "cancel_checks", "batches",
+    "coalesced_requests")
 
 # code -> class, filled by ServiceError.__init_subclass__ so
 # ServiceError.from_dict can rebuild the exact subclass off the wire
@@ -262,6 +274,10 @@ class Ticket:
         self._service: "PlanService | None" = None
         self._batch: "list[Ticket] | None" = None   # batch being served
         self._stage_token: CancelToken | None = None
+        # tracing: the ticket's root "request" span and its "queue_wait"
+        # child (NULL_SPAN unless a tracer was installed at admission)
+        self.span = obs.NULL_SPAN
+        self._wait_span = obs.NULL_SPAN
 
     @property
     def cells(self) -> int:
@@ -361,6 +377,18 @@ class PlanService:
       journal_dir: write-ahead ticket journal directory (None = no
         journal). Admitted-but-unfinished tickets found there at
         construction are replayed into the queue (``self.replayed``).
+      journal_replay_cap: at most this many journal entries are replayed
+        at construction (oldest first — admission order); entries past
+        the cap stay on disk (``stats()["replay_deferred"]``) for a
+        later restart, so a huge backlog cannot wedge startup. None =
+        replay everything.
+      compact_journal: renumber the journal to dense sequences at
+        construction (:meth:`~repro.serve.journal.TicketJournal
+        .compact`) so long-lived journals do not grow sequence numbers
+        without bound.
+      registry: the per-service :class:`~repro.obs.MetricsRegistry`
+        backing :meth:`stats` and :meth:`metrics_text` (a private one is
+        created by default so two services never cross-count).
       compilation_cache: enable jax's persistent compilation cache at
         startup (:func:`repro.kernels.backend.enable_compilation_cache`)
         so a restarted service skips recompiling warm kernels; the
@@ -378,7 +406,10 @@ class PlanService:
                  lp_retry_budget_bytes: int = 8 * 2**20,
                  fallback_variants: tuple[str, ...] = ("asap", "pressWR-LS"),
                  journal_dir: str | None = None,
+                 journal_replay_cap: int | None = None,
+                 compact_journal: bool = True,
                  compilation_cache: bool = True,
+                 registry: obs.MetricsRegistry | None = None,
                  injector=None):
         self._base = planner
         self.workers = max(int(workers), 1)
@@ -406,16 +437,37 @@ class PlanService:
         # lazily on claim. seq breaks vdeadline ties FIFO.
         self._queue: list[tuple[float, int, Ticket]] = []
         self._journal = TicketJournal(journal_dir) if journal_dir else None
-        self._seq = itertools.count(
-            self._journal.next_seq() if self._journal is not None else 0)
+        self.journal_replay_cap = None if journal_replay_cap is None \
+            else max(int(journal_replay_cap), 0)
+        self._compact_journal = bool(compact_journal)
+        # advanced past every live journal entry in _replay_journal
+        self._seq = itertools.count(0)
         self._paused = False
         self._closed = False
         self._killed = False
-        self._counts = collections.Counter()
-        self._stage_counts = collections.Counter()
-        self._latencies: collections.deque[float] = \
-            collections.deque(maxlen=1024)
-        self._stats_lock = threading.Lock()
+        # per-service metrics registry: stats() is a read of these, and
+        # metrics_text() renders them (merged with the process-global
+        # core-layer registry) as Prometheus text exposition
+        self.registry = registry if registry is not None \
+            else obs.MetricsRegistry()
+        self._m_events = self.registry.counter(
+            "plan_service_events_total",
+            "service lifecycle events (admission, degradation, "
+            "supervision, cancellation)", labels=("event",))
+        self._m_stages = self.registry.counter(
+            "plan_service_stage_served_total",
+            "deliveries per fallback-chain stage", labels=("stage",))
+        self._m_inflight = self.registry.gauge(
+            "plan_service_inflight_solves",
+            "chain-stage solves currently on the solve pool")
+        self._m_depth = self.registry.gauge(
+            "plan_service_queue_depth", "live tickets waiting")
+        self._m_depth_max = self.registry.gauge(
+            "plan_service_max_queue_depth",
+            "admission queue high-watermark")
+        self._m_latency = self.registry.histogram(
+            "plan_service_plan_latency_seconds",
+            "admission-to-delivery latency", reservoir=1024)
         # abandoned (cancelled, still unwinding) solves keep their pool
         # worker until the next token poll; spares keep chains walking
         self._solve_pool = _fut.ThreadPoolExecutor(
@@ -447,11 +499,15 @@ class PlanService:
         """
         if self._closed:
             raise ServiceClosed("plan service is closed")
+        root = obs.start_span("request")
+        adm = obs.start_span("admission", parent=root)
         try:
             instances, grid, names = request.resolve()
             validate_resolved(instances, grid)
         except (ValueError, TypeError) as e:
             self._bump(rejected_invalid=1)
+            adm.end(outcome="rejected_invalid")
+            root.end(outcome="rejected_invalid")
             raise InvalidRequest(f"rejected at admission: {e}",
                                  reason=str(e)) from e
         solver = request.solver if request.solver else "heuristic"
@@ -463,12 +519,18 @@ class PlanService:
         ticket = Ticket(request, instances, grid, names, engine, budget,
                         aging=self.aging)
         ticket._service = self
+        ticket.span = root.set(solver=ticket.solver, engine=engine,
+                               cells=ticket.cells, budget=budget)
         with self._cond:
             if self._closed:
+                adm.end(outcome="closed")
+                root.end(outcome="closed")
                 raise ServiceClosed("plan service is closed")
             depth = sum(1 for _, _, t in self._queue if not t.done())
             if depth >= self.max_queue:
                 self._bump(rejected_overloaded=1)
+                adm.end(outcome="rejected_overloaded")
+                root.end(outcome="rejected_overloaded")
                 raise Overloaded(
                     f"admission queue full ({depth} waiting)",
                     queue_depth=depth, max_queue=self.max_queue)
@@ -480,9 +542,10 @@ class PlanService:
                     ticket.options, budget))
             heapq.heappush(self._queue, (ticket.vdeadline, seq, ticket))
             self._bump(submitted=1)
-            with self._stats_lock:
-                self._counts["max_queue_depth"] = max(
-                    self._counts["max_queue_depth"], depth + 1)
+            self._m_depth.set(depth + 1)
+            self._m_depth_max.set_max(depth + 1)
+            adm.end(seq=seq, queue_depth=depth + 1)
+            ticket._wait_span = obs.start_span("queue_wait", parent=root)
             self._cond.notify_all()
         return ticket
 
@@ -495,10 +558,24 @@ class PlanService:
         """Re-admit every admitted-but-unfinished ticket a dead service
         left in the journal (at-least-once: an entry whose answer was
         delivered but not yet erased replays too — it simply re-resolves
-        and clears). Entries keep their original sequence numbers."""
+        and clears).
+
+        The journal is compacted first (sequence numbers renumber to
+        ``0..k-1``; replayed tickets carry the compacted numbers), and
+        ``journal_replay_cap`` bounds how many entries are loaded —
+        deferred entries stay on disk, counted in ``replay_deferred``,
+        and are picked up (oldest first) by a later restart. Either way
+        ``self._seq`` resumes past every live entry, so new admissions
+        never collide with deferred ones."""
         if self._journal is None:
             return
-        for seq, state in self._journal.pending():
+        if self._compact_journal:
+            self._journal.compact()
+        pending = self._journal.pending(limit=self.journal_replay_cap)
+        deferred = len(self._journal) - len(pending)
+        if deferred > 0:
+            self._bump(replay_deferred=deferred)
+        for seq, state in pending:
             try:
                 (instances, grid, names, solver, robust, options,
                  budget) = decode_ticket(state)
@@ -519,9 +596,15 @@ class PlanService:
                             aging=self.aging)
             ticket._service = self
             ticket.journal_seq = seq
+            ticket.span = obs.start_span(
+                "request", solver=solver, engine=engine, replayed=True,
+                seq=seq)
+            ticket._wait_span = obs.start_span("queue_wait",
+                                               parent=ticket.span)
             heapq.heappush(self._queue, (ticket.vdeadline, seq, ticket))
             self.replayed.append(ticket)
             self._bump(submitted=1, replayed=1)
+        self._seq = itertools.count(self._journal.next_seq())
 
     # --- worker pool ------------------------------------------------------
 
@@ -660,6 +743,7 @@ class PlanService:
         for t in tickets:
             if t.done():                       # cancelled while queued
                 continue
+            t._wait_span.end()                 # claimed: the wait is over
             grid = t.grid
             if self.injector is not None and self.injector.corrupts_request():
                 # the chaos seam poisons this ticket's profiles in flight
@@ -715,6 +799,9 @@ class PlanService:
                    slot: _WorkerSlot | None = None, gen: int = 0) -> None:
         attempts = attempts if attempts is not None else []
         chain = self._chain_for(tickets[0].solver)
+        # rung spans parent to the LEAD ticket's trace (one connected
+        # tree per batch); batch-mates' own roots link up at resolution
+        lead = tickets[0]
         for si, stage in enumerate(chain):
             terminal = si == len(chain) - 1
             remaining = self._remaining(tickets)
@@ -722,6 +809,8 @@ class PlanService:
                 # budget exhausted: jump straight to the terminal rung,
                 # which still returns a feasible schedule
                 attempts.append(f"{stage}:skipped")
+                obs.start_span(f"rung:{stage}", parent=lead.span,
+                               stage=stage, outcome="skipped").end()
                 continue
             blocked = False
             attempt = 0
@@ -737,9 +826,14 @@ class PlanService:
                     t._stage_token = token
                 if slot is not None:
                     slot.token = token
+                rung = obs.start_span(
+                    f"rung:{stage}", parent=lead.span, stage=stage,
+                    attempt=attempt, tickets=len(tickets),
+                    blocked_lp=blocked,
+                    budget=None if budget is None else round(budget, 3))
                 fut = self._solve_pool.submit(
                     self._solve_once, stage, tickets, remaining, blocked,
-                    token)
+                    token, rung)
                 try:
                     res = self._watch(fut, slot, gen, token, budget)
                 except _fut.TimeoutError:
@@ -749,6 +843,7 @@ class PlanService:
                     fut.add_done_callback(_swallow)
                     attempts.append(f"{stage}:timeout")
                     self._bump(timeouts=1)
+                    rung.end(outcome="timeout")
                     break                              # next stage
                 except Cancelled:
                     if token.reason == "deadline expired":
@@ -756,16 +851,19 @@ class PlanService:
                         # deadline (same budget the watchdog enforces)
                         attempts.append(f"{stage}:timeout")
                         self._bump(timeouts=1)
+                        rung.end(outcome="timeout")
                         break                          # next stage
                     # client cancelled every ticket, or this worker was
                     # deposed (tickets requeued) — either way the chain
                     # is no longer ours to walk
                     attempts.append(f"{stage}:cancelled")
                     self._bump(cancelled_solves=1)
+                    rung.end(outcome="cancelled")
                     return
                 except SimulatedFailure:
                     attempts.append(f"{stage}:crash")
                     self._bump(retries=1)
+                    rung.end(outcome="crash")
                     attempt += 1
                     if attempt > self.retries:
                         break
@@ -773,6 +871,7 @@ class PlanService:
                     continue
                 except MemoryError:
                     attempts.append(f"{stage}:oom")
+                    rung.end(outcome="oom")
                     if blocked:
                         break                          # blocked retry used
                     blocked = True
@@ -781,6 +880,7 @@ class PlanService:
                     continue
                 except Exception as e:
                     attempts.append(f"{stage}:error")
+                    rung.end(outcome="error", error=type(e).__name__)
                     if len(tickets) > 1:
                         # quarantine bisect: a poisoned batch-mate must
                         # not take the others down — every ticket re-runs
@@ -797,6 +897,7 @@ class PlanService:
                     break                              # next stage
                 else:
                     attempts.append(f"{stage}:ok")
+                    rung.end(outcome="ok")
                     self._deliver(tickets, res, stage, attempts)
                     return
         self._fail(tickets, attempts, None)
@@ -815,44 +916,52 @@ class PlanService:
 
     def _solve_once(self, stage: str, tickets: list[Ticket],
                     remaining: float | None, blocked: bool,
-                    cancel: CancelToken | None = None) -> PlanResult:
+                    cancel: CancelToken | None = None,
+                    rung: "obs.Span | None" = None) -> PlanResult:
         """One chain-stage solve of the whole batch (runs on the solve
-        pool; the watchdog can abandon it and ``cancel`` stops it)."""
-        self._bump(inflight_solves=1)
+        pool; the watchdog can abandon it and ``cancel`` stops it).
+        ``rung`` re-anchors this pool thread to the chain walker's rung
+        span, so the planner/solver spans nest under the right trace."""
+        self._m_inflight.inc()
         try:
-            if self.injector is not None:
-                self.injector.on_solve(stage, cancel=cancel)
-            requested = tickets[0].solver
-            if stage == requested:
-                variants = tickets[0].names if requested == "heuristic" \
-                    else None
-                options = dict(tickets[0].options or {})
-            else:
-                variants = self.fallback_variants if stage == "heuristic" \
-                    else None
-                options = {}
-            if stage in ("ilp", "exact"):
-                limit = options.get("time_limit", self.ilp_time_limit)
-                if remaining is not None:
-                    limit = min(float(limit), max(remaining, 0.1))
-                options["time_limit"] = limit
-            if stage == "heuristic":
-                engine = tickets[0].engine if requested == "heuristic" else \
-                    resolve_engine(self._base.engine,
-                                   fanout=sum(t.cells for t in tickets))
-            else:
-                engine = "numpy"
-            planner = self._planner_for(engine,
-                                        blocked and stage == "heuristic")
-            req = PlanRequest(
-                instances=[i for t in tickets for i in t.instances],
-                profiles=[ps for t in tickets for ps in t.grid],
-                variants=variants, robust=tickets[0].robust, solver=stage,
-                solver_options=options or None)
-            return planner.plan(req, cancel=cancel)
+            with obs.attach(rung), obs.span(
+                    "solve", stage=stage, tickets=len(tickets),
+                    cells=sum(t.cells for t in tickets)):
+                if self.injector is not None:
+                    self.injector.on_solve(stage, cancel=cancel)
+                requested = tickets[0].solver
+                if stage == requested:
+                    variants = tickets[0].names \
+                        if requested == "heuristic" else None
+                    options = dict(tickets[0].options or {})
+                else:
+                    variants = self.fallback_variants \
+                        if stage == "heuristic" else None
+                    options = {}
+                if stage in ("ilp", "exact"):
+                    limit = options.get("time_limit", self.ilp_time_limit)
+                    if remaining is not None:
+                        limit = min(float(limit), max(remaining, 0.1))
+                    options["time_limit"] = limit
+                if stage == "heuristic":
+                    engine = tickets[0].engine \
+                        if requested == "heuristic" else \
+                        resolve_engine(self._base.engine,
+                                       fanout=sum(t.cells
+                                                  for t in tickets))
+                else:
+                    engine = "numpy"
+                planner = self._planner_for(
+                    engine, blocked and stage == "heuristic")
+                req = PlanRequest(
+                    instances=[i for t in tickets for i in t.instances],
+                    profiles=[ps for t in tickets for ps in t.grid],
+                    variants=variants, robust=tickets[0].robust,
+                    solver=stage, solver_options=options or None)
+                return planner.plan(req, cancel=cancel)
         finally:
-            self._bump(inflight_solves=-1,
-                       cancel_checks=cancel.checks
+            self._m_inflight.dec()
+            self._bump(cancel_checks=cancel.checks
                        if cancel is not None else 0)
 
     # --- delivery ---------------------------------------------------------
@@ -878,10 +987,15 @@ class PlanService:
                 fallback_stage=stage, attempts=tuple(attempts))
             if _try_resolve(t._fut, sub):
                 self._bump(completed=1, degraded=1 if sub.degraded else 0)
-                with self._stats_lock:
-                    self._stage_counts[stage] += 1
-                    self._latencies.append(now - t.admitted)
+                self._m_stages.inc(stage=stage)
+                self._m_latency.observe(now - t.admitted)
                 self._journal_resolve(t)
+                t._wait_span.end()
+                obs.start_span("resolution", parent=t.span, stage=stage,
+                               degraded=sub.degraded,
+                               coalesced=len(tickets)).end()
+                t.span.end(outcome="completed", stage=stage,
+                           degraded=sub.degraded)
             i0 = i1
 
     def _journal_resolve(self, ticket: Ticket) -> None:
@@ -897,6 +1011,8 @@ class PlanService:
         is also done, cancel the solve itself through the stage token."""
         self._bump(cancelled=1)
         self._journal_resolve(ticket)
+        ticket._wait_span.end()
+        ticket.span.end(outcome="cancelled")
         batch, token = ticket._batch, ticket._stage_token
         if batch is not None and token is not None and \
                 all(t.done() for t in batch):
@@ -908,6 +1024,8 @@ class PlanService:
         won = _try_reject(ticket._fut, err)
         if won:
             self._journal_resolve(ticket)
+            ticket._wait_span.end()
+            ticket.span.end(outcome=err.code)
         return won
 
     def _fail(self, tickets: list[Ticket], attempts: list[str],
@@ -923,31 +1041,33 @@ class PlanService:
     # --- telemetry / lifecycle --------------------------------------------
 
     def _bump(self, **deltas) -> None:
-        with self._stats_lock:
-            for k, v in deltas.items():
-                self._counts[k] += v
+        """Shim from the pre-registry ``Counter`` spelling onto the
+        per-service metrics registry (one labeled counter per event)."""
+        for k, v in deltas.items():
+            if v:
+                self._m_events.inc(v, event=k)
 
     def stats(self) -> dict:
         """Service telemetry snapshot: admission/degradation counters,
         worker supervision counters, cancellation counters, coalescing
-        ratio, and plan-latency percentiles."""
+        ratio, and plan-latency percentiles.
+
+        This is a read of ``self.registry`` — the wire shape predates
+        the registry and is preserved exactly; :meth:`metrics_text`
+        exposes the same numbers as Prometheus text exposition."""
         with self._cond:
             depth = sum(1 for _, _, t in self._queue if not t.done())
-        with self._stats_lock:
-            c = dict(self._counts)
-            lat = np.asarray(self._latencies, dtype=np.float64)
-            stages = dict(self._stage_counts)
+        self._m_depth.set(depth)
+        c = {k: int(self._m_events.value(event=k)) for k in _STAT_EVENTS}
+        lat = np.asarray(self._m_latency.samples(), dtype=np.float64)
+        stages = {key[0]: int(v)
+                  for key, v in self._m_stages.values().items()}
         batches = c.get("batches", 0)
         served = c.get("coalesced_requests", 0)
         return {
-            **{k: c.get(k, 0) for k in (
-                "submitted", "completed", "failed", "degraded",
-                "rejected_overloaded", "rejected_invalid", "quarantined",
-                "splits", "retries", "oom_retries", "timeouts",
-                "cancelled", "cancelled_solves", "worker_restarts",
-                "requeued", "replayed", "replay_corrupt",
-                "priority_inversions", "inflight_solves", "cancel_checks",
-                "batches", "coalesced_requests", "max_queue_depth")},
+            **c,
+            "inflight_solves": int(self._m_inflight.value()),
+            "max_queue_depth": int(self._m_depth_max.value()),
             "workers": self.workers,
             "queue_depth": depth,
             "coalesce_ratio": served / batches if batches else None,
@@ -960,6 +1080,12 @@ class PlanService:
                 if lat.size else None,
             },
         }
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of this service's registry merged
+        with the process-global core-layer registry — serve it verbatim
+        as a ``/metrics`` body."""
+        return obs.render_prometheus(self.registry, obs.registry())
 
     def pause(self) -> None:
         """Hold the workers (drills/tests: lets callers fill the queue

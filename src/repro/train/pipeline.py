@@ -28,7 +28,7 @@ def pipeline_apply(body_fn, stage_params, x_mb, *, axis_name: str = "pod"):
     Returns [M, mb, ...] outputs of the LAST stage (other pods produce
     zeros; caller reduces/selects).
     """
-    n_stages = lax.axis_size(axis_name)
+    n_stages = lax.psum(1, axis_name)
     stage = lax.axis_index(axis_name)
     # shard_map keeps the (now size-1) stage axis on the params block
     stage_params = jax.tree.map(lambda a: a[0], stage_params)

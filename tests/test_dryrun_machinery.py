@@ -47,6 +47,8 @@ lowered = jax.jit(step, in_shardings=(ns(s_specs), ns(b_specs)),
                                      "lr": P()}))).lower(state, batch)
 compiled = lowered.compile()
 ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):
+    ca = ca[0]
 cb = collective_bytes(compiled.as_text())
 assert ca["flops"] > 0
 assert cb["total"] > 0, "multi-axis mesh must produce collectives"

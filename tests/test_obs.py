@@ -1,0 +1,379 @@
+"""Observability subsystem suite: tracing, metrics, service integration.
+
+Covers the PR's acceptance criteria:
+
+* a forced fallback-chain solve through :class:`PlanService` produces a
+  SINGLE connected trace — admission -> queue wait -> per-rung attempts
+  -> resolution — with per-rung timings;
+* the JSONL export is loadable with ``json.loads`` line by line;
+* ``PlanService.stats()`` (the legacy wire shape) is exactly a read of
+  the per-service metrics registry;
+* the Prometheus text exposition parses and its histogram invariants
+  hold;
+* journal compaction is lossless under replay, and the replay cap
+  defers (never drops) excess entries;
+* the no-leaked-spans fixture guards every traced test.
+"""
+import json
+import re
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api import Planner, PlanRequest
+from repro.cluster import make_cluster
+from repro.core import (
+    build_instance,
+    deadline_from_asap,
+    generate_profile,
+    heft_mapping,
+    validate_schedule,
+)
+from repro.core.cancel import Cancelled, CancelToken
+from repro.runtime.fault import FaultSpec, ServiceFaultInjector
+from repro.serve import PlanService, TicketJournal, decode_ticket
+from repro.serve.service import _STAT_EVENTS
+from repro.workflows import make_workflow
+
+
+def _setup(kind="eager", samples=3, seed=3, factor=1.5, scenario="S3"):
+    plat = make_cluster(1, seed=seed)
+    wf = make_workflow(kind, samples, seed=seed)
+    inst = build_instance(wf, heft_mapping(wf, plat), plat)
+    T = deadline_from_asap(inst, factor)
+    prof = generate_profile(scenario, T, plat, J=16, seed=seed)
+    return plat, inst, prof
+
+
+@pytest.fixture
+def traced():
+    """A fresh process tracer; fails the test if any span leaks open."""
+    prev = obs.set_tracer(obs.Tracer())
+    tr = obs.tracer()
+    try:
+        yield tr
+        leaked = tr.open_spans()
+        assert not leaked, f"leaked open spans: {leaked}"
+    finally:
+        obs.set_tracer(prev)
+
+
+# --- tracer primitives -----------------------------------------------------
+
+def test_span_nesting_and_idempotent_end(traced):
+    with traced.span("root") as root:
+        with traced.span("child", k=1) as child:
+            assert child.parent_id == root.span_id
+            assert child.trace_id == root.trace_id
+    child.end()                                # second end: no-op
+    assert len(traced.finished()) == 2
+    tree = traced.tree(root.trace_id)
+    assert [n["name"] for n in tree] == ["root"]
+    assert [n["name"] for n in tree[0]["children"]] == ["child"]
+
+
+def test_span_records_exception_as_error_attr(traced):
+    with pytest.raises(ValueError):
+        with traced.span("boom"):
+            raise ValueError("x")
+    (sp,) = traced.finished()
+    assert sp.attrs["error"] == "ValueError"
+
+
+def test_attach_reanchors_worker_thread(traced):
+    with traced.span("parent") as parent:
+        seen = {}
+
+        def worker():
+            with traced.attach(parent):
+                with traced.span("inner") as sp:
+                    seen["parent_id"] = sp.parent_id
+
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen["parent_id"] == parent.span_id
+
+
+def test_disabled_tracing_returns_null_span():
+    prev = obs.set_tracer(None)
+    try:
+        sp = obs.span("anything", k=1)
+        assert sp is obs.NULL_SPAN and not sp
+        with sp:
+            sp.set(x=2).end()
+        assert obs.current_span() is None
+    finally:
+        obs.set_tracer(prev)
+
+
+def test_jsonl_export_loads_line_by_line(traced, tmp_path):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    planner.plan(PlanRequest(instances=inst, profiles=prof))
+    path = tmp_path / "trace.jsonl"
+    n = traced.dump_jsonl(str(path))
+    lines = path.read_text().strip().split("\n")
+    assert len(lines) == n > 0
+    events = [json.loads(line) for line in lines]   # every line parses
+    for ev in events:
+        assert ev["ph"] == "X"
+        assert ev["ts"] >= 0 and ev["dur"] >= 0
+        assert "span_id" in ev["args"]
+    assert any(ev["name"] == "plan" for ev in events)
+
+
+# --- the acceptance trace: forced fallback chain through the service -------
+
+def test_forced_fallback_chain_is_one_connected_trace(traced):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage="heuristic", times=10)])
+    with PlanService(planner.clone(), injector=inj, retries=1,
+                     backoff=0.01) as svc:
+        res = svc.plan(PlanRequest(instances=inst, profiles=prof))
+    assert res.degraded and res.fallback_stage == "asap"
+    assert res.attempts == ("heuristic:crash", "heuristic:crash",
+                            "asap:ok")
+
+    spans = traced.finished()
+    roots = [s for s in spans if s.name == "request"]
+    assert len(roots) == 1
+    root = roots[0]
+    ours = [s for s in spans if s.trace_id == root.trace_id]
+    # single CONNECTED trace: every span of this request shares the
+    # root's trace id and reaches the root through parent links
+    by_id = {s.span_id: s for s in ours}
+    for s in ours:
+        node = s
+        while node.parent_id:
+            node = by_id[node.parent_id]
+        assert node is root
+
+    names = [s.name for s in ours]
+    assert "admission" in names and "queue_wait" in names
+    assert "resolution" in names
+    rungs = sorted((s for s in ours if s.name.startswith("rung:")),
+                   key=lambda s: s.t0)
+    assert [(s.attrs["stage"], s.attrs["outcome"]) for s in rungs] == \
+        [("heuristic", "crash"), ("heuristic", "crash"), ("asap", "ok")]
+    for s in rungs:                      # per-rung timings
+        assert s.t1 is not None and s.duration >= 0
+        assert s.parent_id == root.span_id
+    # the winning rung ran a solve that reached the planner layer
+    ok_rung = rungs[-1]
+    solves = [s for s in ours if s.name == "solve"
+              and s.parent_id == ok_rung.span_id]
+    assert len(solves) == 1
+    assert any(s.name == "plan" and s.parent_id == solves[0].span_id
+               for s in ours)
+    assert root.attrs["outcome"] == "completed"
+
+
+# --- metrics: stats() is a registry read -----------------------------------
+
+def test_stats_equals_registry_read(traced):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    inj = ServiceFaultInjector(
+        faults=[FaultSpec(kind="crash", stage="heuristic", times=1)])
+    with PlanService(planner.clone(), injector=inj, retries=2,
+                     backoff=0.01) as svc:
+        for _ in range(3):
+            svc.plan(PlanRequest(instances=inst, profiles=prof))
+        with pytest.raises(Exception):
+            svc.plan(PlanRequest(instances=inst, profiles=[]))
+        stats = svc.stats()
+        reg = svc.registry
+        ev = reg.get("plan_service_events_total")
+        for key in _STAT_EVENTS:
+            assert stats[key] == int(ev.value(event=key)), key
+        assert stats["submitted"] == 3 and stats["completed"] == 3
+        assert stats["retries"] == 1 and stats["rejected_invalid"] == 1
+        stage_counter = reg.get("plan_service_stage_served_total")
+        assert stats["stages"] == {
+            k[0]: int(v) for k, v in stage_counter.values().items()}
+        lat = reg.get("plan_service_plan_latency_seconds")
+        assert stats["latency"]["n"] == len(lat.samples()) == 3
+        assert stats["latency"]["p50_ms"] == pytest.approx(
+            float(np.percentile(np.asarray(lat.samples()), 50) * 1e3))
+        assert stats["inflight_solves"] == 0
+        assert stats["max_queue_depth"] == int(
+            reg.get("plan_service_max_queue_depth").value())
+
+
+def test_two_services_never_cross_count():
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    with PlanService(planner.clone()) as a, \
+            PlanService(planner.clone()) as b:
+        a.plan(PlanRequest(instances=inst, profiles=prof))
+        assert a.stats()["submitted"] == 1
+        assert b.stats()["submitted"] == 0
+        assert a.registry is not b.registry
+
+
+# --- Prometheus exposition -------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z0-9_]+="[^"]*"'
+    r'(,[a-zA-Z0-9_]+="[^"]*")*\})? [^ ]+$')
+
+
+def test_prometheus_exposition_parses(traced):
+    plat, inst, prof = _setup()
+    planner = Planner(plat, engine="numpy")
+    with PlanService(planner.clone()) as svc:
+        svc.plan(PlanRequest(instances=inst, profiles=prof))
+        text = svc.metrics_text()
+    typed = set()
+    for line in text.strip().split("\n"):
+        if line.startswith("# TYPE "):
+            name, kind = line.split()[2:4]
+            assert kind in ("counter", "gauge", "histogram")
+            typed.add(name)
+        elif not line.startswith("#"):
+            assert _SAMPLE_RE.match(line), line
+            metric = line.split("{")[0].split(" ")[0]
+            base = re.sub(r"_(bucket|sum|count)$", "", metric)
+            assert metric in typed or base in typed, line
+    assert "plan_service_events_total" in typed
+    assert "plan_service_plan_latency_seconds" in typed
+    # histogram invariants: buckets cumulative, +Inf == _count
+    hist = [line for line in text.split("\n")
+            if line.startswith("plan_service_plan_latency_seconds")]
+    buckets = [float(line.split()[-1]) for line in hist
+               if "_bucket" in line]
+    assert buckets == sorted(buckets)
+    count = next(float(line.split()[-1]) for line in hist
+                 if line.startswith("plan_service_plan_latency_seconds_count"))
+    inf = next(float(line.split()[-1]) for line in hist
+               if 'le="+Inf"' in line)
+    assert inf == count == 1
+
+
+def test_metric_type_and_label_safety():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("x_total", labels=("a",))
+    with pytest.raises(ValueError):
+        c.inc(-1, a="v")
+    with pytest.raises(ValueError):
+        c.inc(a="v", b="w")
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError):
+        reg.counter("x_total", labels=("other",))
+    g = reg.gauge("depth")
+    g.set_max(5)
+    g.set_max(3)
+    assert g.value() == 5
+
+
+def test_cancel_latency_histogram_observes():
+    hist = obs.registry().get("cancel_observe_latency_seconds")
+    before = hist.count()
+    token = CancelToken()
+    token.cancel("test")
+    with pytest.raises(Cancelled):
+        token.check()
+    with pytest.raises(Cancelled):
+        token.check()                   # latency recorded exactly once
+    assert hist.count() == before + 1
+
+
+# --- journal compaction + replay cap ---------------------------------------
+
+def _fill_killed_journal(tmp_path, n, samples=2):
+    plat, inst, prof = _setup(samples=samples)
+    planner = Planner(plat, engine="numpy")
+    jd = str(tmp_path / "journal")
+    svc = PlanService(planner.clone(), journal_dir=jd)
+    svc.pause()
+    for k in range(n):
+        svc.submit(PlanRequest(instances=inst, profiles=prof))
+    svc.kill()
+    return planner, inst, prof, jd
+
+
+def test_journal_compaction_lossless_replay(tmp_path):
+    planner, inst, prof, jd = _fill_killed_journal(tmp_path, 3)
+    journal = TicketJournal(jd)
+    assert len(journal) == 3
+    journal.resolve(1)                         # punch a hole: seqs 0, 2
+    before = {seq: decode_ticket(state) for seq, state in journal.pending()}
+    mapping = journal.compact()
+    assert mapping == {0: 0, 2: 1}
+    after = {seq: decode_ticket(state) for seq, state in journal.pending()}
+    assert sorted(after) == [0, 1]
+    # lossless: entry content survives renumbering bit-for-bit
+    for old, new in mapping.items():
+        old_inst = before[old][0]
+        new_inst = after[new][0]
+        assert len(old_inst) == len(new_inst)
+        for a, b in zip(old_inst, new_inst):
+            assert (a.dur == b.dur).all() and (a.proc == b.proc).all()
+    # a service on the compacted journal replays and serves both
+    direct = planner.plan(PlanRequest(instances=inst, profiles=prof))
+    with PlanService(planner.clone(), journal_dir=jd) as svc:
+        assert len(svc.replayed) == 2
+        for t in svc.replayed:
+            res = t.result(timeout=60)
+            assert (res.costs == direct.costs).all()
+    assert len(TicketJournal(jd)) == 0         # clean close, all resolved
+
+
+def test_journal_replay_cap_defers_excess(tmp_path):
+    planner, inst, prof, jd = _fill_killed_journal(tmp_path, 4)
+    with PlanService(planner.clone(), journal_dir=jd,
+                     journal_replay_cap=2) as svc:
+        assert len(svc.replayed) == 2
+        assert [t.journal_seq for t in svc.replayed] == [0, 1]  # oldest
+        assert svc.stats()["replay_deferred"] == 2
+        for t in svc.replayed:
+            t.result(timeout=60)
+        # a new admission must not collide with the deferred entries
+        t = svc.submit(PlanRequest(instances=inst, profiles=prof))
+        assert t.journal_seq >= 4
+        t.result(timeout=60)
+    # deferred entries survived on disk; an uncapped restart drains them
+    assert len(TicketJournal(jd)) == 2
+    with PlanService(planner.clone(), journal_dir=jd) as svc2:
+        assert len(svc2.replayed) == 2
+        assert svc2.stats()["replay_deferred"] == 0
+        for t in svc2.replayed:
+            res = t.result(timeout=60)
+            validate_schedule(inst, prof, res.result().start)
+    assert len(TicketJournal(jd)) == 0
+
+
+# --- planner/core layer metrics --------------------------------------------
+
+def test_planner_metrics_count_plans_and_cache_hits():
+    plat, inst, prof = _setup()
+    reg = obs.registry()
+    plans = reg.counter("planner_plans_total",
+                        labels=("solver", "engine"))
+    cache = reg.counter("planner_graph_cache_total", labels=("outcome",))
+    p0 = plans.value(solver="heuristic", engine="numpy")
+    h0, m0 = cache.value(outcome="hit"), cache.value(outcome="miss")
+    planner = Planner(plat, engine="numpy")
+    planner.plan(PlanRequest(instances=inst, profiles=prof))
+    planner.plan(PlanRequest(instances=inst, profiles=prof))
+    assert plans.value(solver="heuristic", engine="numpy") == p0 + 2
+    assert cache.value(outcome="miss") == m0 + 1      # first prepare
+    assert cache.value(outcome="hit") >= h0 + 1       # second reuses
+
+
+def test_jax_hooks_snapshot_shape():
+    from repro.obs import jax_hooks
+    reg = obs.MetricsRegistry()
+    jax_hooks.install(reg)
+    jax_hooks.install(reg)                     # idempotent
+    jax_hooks.update_device_gauges(reg)
+    snap = jax_hooks.snapshot(reg)
+    assert set(snap) >= {"compile_events", "compile_seconds",
+                         "jit_cache_entries", "live_arrays"}
+    assert isinstance(snap["jit_cache_entries"], dict)
