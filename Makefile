@@ -9,7 +9,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-device test-host test-exact test-big test-chaos \
-	test-chaos-flake test-obs bench bench-smoke planner-smoke verify
+	test-chaos-flake test-obs test-mapping bench bench-smoke \
+	planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -54,6 +55,11 @@ test-chaos-flake:
 test-obs:
 	$(PY) -m pytest -x -q tests/test_obs.py
 
+# mapping subsystem: HEFT seeds, neighborhood moves, joint search
+# quality chain, mapping-mode request validation, service integration
+test-mapping:
+	$(PY) -m pytest -x -q tests/test_mapping.py
+
 bench:
 	$(PY) -m benchmarks.run --only portfolio
 
@@ -65,5 +71,5 @@ planner-smoke:
 	PlanRequest, PlanResult, PlanningSession; print('planner api: ok')"
 
 # the PR gate: tier-1 tests + chaos drills + observability suite +
-# Planner import smoke + tier-2 bench refresh
-verify: test test-chaos test-obs planner-smoke bench-smoke
+# mapping suite + Planner import smoke + tier-2 bench refresh
+verify: test test-chaos test-obs test-mapping planner-smoke bench-smoke

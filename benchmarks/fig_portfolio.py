@@ -37,6 +37,11 @@ Emits ``benchmarks/out/BENCH_portfolio.json``:
     wall clock on the same steady-state fan-out, the
     ``disabled_tracer_overhead_frac`` acceptance number (asserted < 2%),
     and the jax hook snapshot (compile events, jit cache entries);
+  * ``mapping`` — joint mapping x scheduling vs schedule-only: per
+    motif family, the best cost under the fixed HEFT mapping vs the
+    candidate-mapping search on a scarce profile, the saving fraction,
+    and candidate throughput (acceptance: search strictly wins on >= 3
+    of the 4 families);
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -443,6 +448,62 @@ def _obs_section(cases, with_jax: bool) -> dict:
     }
 
 
+def _mapping_section() -> dict:
+    """Joint mapping x scheduling vs schedule-only, per motif family.
+
+    For each of the paper's four workflow motifs: plan the same workflow
+    with ``mapping="heft"`` (HEFT mapping, schedule-only optimization)
+    and ``mapping="search"`` (the alternating candidate-mapping search),
+    on a scarce profile where the green budget covers ~40 units of work
+    per interval — the regime where the mapping choice actually moves
+    carbon cost.  Reports per-motif best costs, the joint-mode saving,
+    and candidate throughput; the acceptance bar is a strict search win
+    on at least 3 of the 4 families."""
+    from repro.api import Planner, PlanRequest
+    from repro.cluster import make_cluster
+    from repro.core import build_instance, deadline_from_asap, heft_mapping
+    from repro.workflows import WORKFLOW_KINDS, make_workflow
+
+    plat = make_cluster(1, seed=0)
+    families = []
+    wins = 0
+    for kind in WORKFLOW_KINDS:
+        wf = make_workflow(kind, 2, seed=1)
+        inst_h = build_instance(wf, heft_mapping(wf, plat), plat)
+        T = deadline_from_asap(inst_h, 3.0)
+        prof = generate_profile("S3", T, plat, J=12, seed=2,
+                                work_capacity=40)
+        planner = Planner(plat, engine="numpy")
+        res_h = planner.plan(PlanRequest(instances=wf, profiles=prof,
+                                         mapping="heft"))
+        t0 = time.perf_counter()
+        res_s = planner.plan(PlanRequest(
+            instances=wf, profiles=prof, mapping="search",
+            mapping_options={"seeds": 6, "rounds": 3, "neighbors": 9,
+                             "seed": 0}))
+        t_search = time.perf_counter() - t0
+        info = res_s.mapping_info[0]
+        cost_h = int(res_h.best().cost)
+        cost_s = int(res_s.best().cost)
+        wins += cost_s < cost_h
+        families.append({
+            "family": kind,
+            "n_tasks": int(wf.n),
+            "T": int(T),
+            "heft_cost": cost_h,
+            "search_cost": cost_s,
+            "saving_frac": (cost_h - cost_s) / cost_h if cost_h else 0.0,
+            "winner_label": info.label,
+            "candidates": info.candidates,
+            "rounds": info.rounds,
+            "candidates_per_sec": (info.candidates / t_search
+                                   if t_search > 0 else None),
+            "search_seconds": t_search,
+        })
+    return {"families": families, "search_wins": wins,
+            "n_families": len(families)}
+
+
 def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         with_jax: bool = True, n_profiles: int = 8,
         gap_time_limit: float = 20.0):
@@ -592,6 +653,8 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
 
     gaps = _gap_table(gap_time_limit)
 
+    mapping = _mapping_section()
+
     n = len(cases)
     matrix = {"sizes": list(sizes), "clusters": list(clusters),
               "n_cases": n, "n_profiles": n_profiles}
@@ -615,6 +678,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         "service": service,
         "obs": obs_stats,
         "gaps": gaps,
+        "mapping": mapping,
         "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -660,6 +724,13 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
          f";spans_per_plan={obs_stats['spans_per_plan']}"
          f";enabled_overhead="
          f"{obs_stats['enabled_tracer_overhead_frac'] * 100:.1f}%")
+    cps = [f["candidates_per_sec"] for f in mapping["families"]
+           if f["candidates_per_sec"]]
+    emit("planner_mapping",
+         float(np.median(cps)) if cps else 0.0,
+         f"search_wins={mapping['search_wins']}/{mapping['n_families']}"
+         f";median_saving="
+         f"{np.median([f['saving_frac'] for f in mapping['families']]) * 100:.1f}%")
     for gc in gaps["cases"]:
         asap_s = ("n/a" if gc["gap_asap"] is None
                   else f"{gc['gap_asap']:.3f}")

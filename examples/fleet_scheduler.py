@@ -13,8 +13,11 @@ engine every shape bucket of the grid is a single triple-vmapped device
 launch. Per fleet the ROBUST variant is executed: the one whose worst
 cost across the ensemble is smallest (min-max).
 
-A :class:`~repro.api.PlanningSession` then replans fleet 0 over a rolling
-3-window horizon — window k+1's plan is computed on a background worker
+Fleet 0 is then re-planned with ``mapping="search"`` — the chunk->pod
+placement becomes a decision variable optimized jointly with the
+schedule (candidate mappings fan out through the same batched grid) —
+and a :class:`~repro.api.PlanningSession` replans it over a rolling
+3-window horizon: window k+1's plan is computed on a background worker
 while window k "executes".
 
     PYTHONPATH=src python examples/fleet_scheduler.py
@@ -77,15 +80,16 @@ def build_fleet(plat, jobs0, jobs1):
     wf, mapping = chunk_workflow([len(c0), len(c1)], [c0, c1])
     inst = build_instance(wf, mapping, plat, dur=wf.node_w)
     horizon = int(2.5 * max(sum(c0), sum(c1)))
-    return inst, horizon
+    return inst, horizon, wf
 
 
 def main():
     plat = fleet_platform(pods=2, chip_watts_idle=100, chip_watts_work=250,
                           chips_per_pod=256)
-    names, instances, ensembles = [], [], []
+    names, instances, ensembles, fleet_wfs = [], [], [], []
     for name, (jobs0, jobs1) in FLEETS.items():
-        inst, horizon = build_fleet(plat, jobs0, jobs1)
+        inst, horizon, wf = build_fleet(plat, jobs0, jobs1)
+        fleet_wfs.append(wf)
         # ensemble: one nominal forecast + perturbed members (same interval
         # grid, resampled budget noise — forecast uncertainty)
         profs = [generate_profile("S3", horizon, plat, J=48, seed=3 + s,
@@ -123,6 +127,30 @@ def main():
             starts = [int(best.start[t]) for t in chain]
             print(f"  pod{pod} chunk starts: {starts[:10]}"
                   f"{'...' if len(starts) > 10 else ''}")
+
+    # --- joint mapping x scheduling of fleet 0 ----------------------------
+    # The chunk->pod placement above is a FIXED mapping; `mapping="search"`
+    # makes it a decision variable: candidate chunk placements are fanned
+    # out through the same batched grid, and the cheapest (mapping,
+    # schedule) pair wins — chunks migrate to the pod whose green windows
+    # fit them.
+    wf0, nominal = fleet_wfs[0], ensembles[0][0]
+    res_fixed = planner.plan(PlanRequest(instances=instances[0],
+                                         profiles=nominal))
+    res_joint = planner.plan(PlanRequest(
+        instances=wf0, profiles=nominal, mapping="search",
+        mapping_options={"seeds": 4, "rounds": 2, "neighbors": 6}))
+    cost_fixed = res_fixed.best().cost
+    cost_joint = res_joint.best().cost
+    info = res_joint.mapping_info[0]
+    print(f"\n[joint mapping x scheduling] fleet {names[0]}, nominal "
+          f"forecast")
+    print(f"  fixed chunk->pod mapping: carbon {cost_fixed}")
+    print(f"  searched mapping ({info.candidates} candidates, "
+          f"{info.rounds} rounds, winner {info.label!r}): "
+          f"carbon {cost_joint} "
+          f"({(cost_fixed - cost_joint) / max(cost_fixed, 1) * 100:.1f}% "
+          f"saved)")
 
     # --- async rolling-horizon replanning of fleet 0 ----------------------
     inst, W = instances[0], ensembles[0][0].T

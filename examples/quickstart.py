@@ -48,6 +48,15 @@ def main():
     print(f"\nbest variant: {best.variant} "
           f"({best.cost / max(asap.cost, 1):.3f}x ASAP)")
 
+    # The HEFT mapping above is fixed before scheduling. To optimize the
+    # mapping JOINTLY with the schedule, pass the raw workflow instead of
+    # an instance and set mapping="search" (or "heft" for plain HEFT):
+    #     res = planner.plan(PlanRequest(
+    #         instances=workflow, profiles=profile, mapping="search"))
+    #     res.mappings[0]       # the winning FixedMapping
+    #     res.mapping_info[0]   # search provenance (rounds, candidates)
+    # See examples/fleet_scheduler.py for a measured joint-vs-fixed run.
+
     # --- optimality audit on a small instance (the solver axis) ----------
     # solver="exact" dispatches per instance: the polynomial DP on a
     # single-processor chain, the time-indexed ILP otherwise. The same

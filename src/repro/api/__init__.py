@@ -28,6 +28,7 @@ heuristics-vs-baseline-vs-exact evaluation is three ``plan()`` calls:
 from repro.api.planner import Planner  # noqa: F401
 from repro.api.request import (  # noqa: F401
     LocalSearchConfig,
+    MAPPING_MODES,
     PlanRequest,
     crop_profile,
     window_profile,

@@ -158,6 +158,23 @@ class Planner:
         t0 = time.perf_counter()
         instances, grid, names = request.resolve()
         solver = resolve_solver(request.solver)
+        outcomes = None
+        if request.mapping != "fixed":
+            # mapping modes resolve raw Workflows to mapped Instances
+            # first (repro.mapping); the winning instances then ride the
+            # unchanged fixed-mapping path below, with winner graphs
+            # pre-seeded into the cache
+            from repro.mapping.search import resolve_mappings
+
+            outcomes = resolve_mappings(
+                self, instances, grid, names, solver,
+                mode=request.mapping, options=request.mapping_options,
+                robust=bool(request.robust),
+                solver_options=request.solver_options, cancel=cancel)
+            instances = [o.instance for o in outcomes]
+            for o in outcomes:
+                if o.graph is not None:
+                    self.seed_graph(o.graph)
         I = len(instances)
         P = len(grid[0]) if I else 0
         # engine= is the heuristic solver's sub-knob; exact solvers run
@@ -185,17 +202,17 @@ class Planner:
             labels=("solver", "engine"), reservoir=256,
         ).observe(time.perf_counter() - t0, solver=solver.name,
                   engine=engine)
-        cells = out.cells
-        costs = np.array(
-            [[[cells[i][p][n].cost for n in names] for p in range(P)]
-             for i in range(I)],
-            dtype=np.int64).reshape(I, P, len(names))
-        return PlanResult(variants=names, results=cells, costs=costs,
-                          engine=engine,
+        return PlanResult(variants=names, results=out.cells,
+                          costs=out.cost_tensor(names), engine=engine,
                           seconds=time.perf_counter() - t0,
                           robust_requested=bool(request.robust),
                           solver=solver.name, lower_bound=out.lower,
-                          mip_gap=out.mip_gap)
+                          mip_gap=out.mip_gap,
+                          mapping_mode=request.mapping,
+                          mappings=None if outcomes is None else
+                          tuple(o.mapping for o in outcomes),
+                          mapping_info=None if outcomes is None else
+                          tuple(o.info for o in outcomes))
 
     def session(self, instances, window_profiles, **kw):
         """An async rolling-horizon :class:`~repro.api.session

@@ -23,6 +23,12 @@ import numpy as np
 from repro.core.carbon import PowerProfile
 from repro.core.cawosched import VARIANTS_BY_NAME, deadline_from_asap
 from repro.core.dag import Instance
+from repro.workflows.generators import Workflow, topological_order
+
+# mapping axis: "fixed" schedules pre-built Instances under their baked-in
+# mapping (the paper's setting); "heft"/"search" accept raw Workflows and
+# resolve the task->processor mapping inside the plan (repro.mapping)
+MAPPING_MODES = ("fixed", "heft", "search")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +117,9 @@ def validate_resolved(instances, grid) -> None:
     from repro.core.estlst import compute_est
 
     for i, (inst, ps) in enumerate(zip(instances, grid)):
+        if isinstance(inst, Workflow):
+            _validate_workflow(i, inst, ps)
+            continue
         n = inst.num_tasks
         for name, idx in (("succ", inst.succ_idx), ("pred", inst.pred_idx)):
             if len(idx) and (idx.min() < 0 or idx.max() >= n):
@@ -139,12 +148,80 @@ def validate_resolved(instances, grid) -> None:
                     f"the instance's critical path {need} (infeasible)")
 
 
+def _validate_workflow(i: int, wf: Workflow, ps) -> None:
+    """The workflow branch of :func:`validate_resolved` (mapping modes).
+
+    Structural checks mirror the instance branch, but the horizon check
+    uses a mapping-independent lower bound — the longest chain in tasks
+    (every task runs >= 1 time unit on any processor), since the actual
+    critical path depends on the mapping the plan will choose.
+    """
+    n = wf.n
+    if n < 1:
+        raise ValueError(f"workflow {i} ({wf.name!r}): empty workflow")
+    edges = np.asarray(wf.edges)
+    if edges.ndim != 2 or (len(edges) and edges.shape[1] != 2):
+        raise ValueError(
+            f"workflow {i} ({wf.name!r}): edges must be [m, 2] pairs")
+    if len(edges) and (edges.min() < 0 or edges.max() >= n):
+        raise ValueError(
+            f"workflow {i} ({wf.name!r}): edge endpoint outside [0, {n})")
+    if (np.asarray(wf.node_w) < 1).any():
+        raise ValueError(
+            f"workflow {i} ({wf.name!r}): non-positive task weight")
+    if len(edges) and (np.asarray(wf.edge_w) < 0).any():
+        raise ValueError(
+            f"workflow {i} ({wf.name!r}): negative communication weight")
+    order = topological_order(n, edges)
+    if len(order) != n:
+        raise ValueError(f"workflow {i} ({wf.name!r}): graph has a cycle")
+    depth = np.zeros(n, dtype=np.int64)
+    for v in order:
+        for u in edges[edges[:, 1] == v, 0] if len(edges) else ():
+            depth[v] = max(depth[v], depth[int(u)] + 1)
+    need = int(depth.max()) + 1 if n else 0
+    for p, prof in enumerate(ps):
+        b = np.asarray(prof.bounds)
+        g = np.asarray(prof.budget)
+        if b.ndim != 1 or len(b) < 2 or int(b[0]) != 0 \
+                or (np.diff(b) <= 0).any():
+            raise ValueError(
+                f"cell ({i}, {p}): malformed profile bounds "
+                f"(need 0 = b[0] < ... < b[J] = T)")
+        if g.ndim != 1 or len(g) != len(b) - 1:
+            raise ValueError(
+                f"cell ({i}, {p}): profile budget length {len(g)} != "
+                f"{len(b) - 1} intervals")
+        if prof.T < need:
+            raise ValueError(
+                f"cell ({i}, {p}): horizon {prof.T} is shorter than the "
+                f"workflow's depth {need} (infeasible under any mapping)")
+
+
 def _as_instances(instances) -> list[Instance]:
     if isinstance(instances, Instance):
         return [instances]
     out = list(instances)
     if not all(isinstance(i, Instance) for i in out):
         raise TypeError("instances must be Instance objects")
+    return out
+
+
+def _as_workflows(instances) -> list[Workflow]:
+    if isinstance(instances, Workflow):
+        return [instances]
+    err = TypeError(
+        "mapping modes 'heft'/'search' take raw Workflow objects "
+        "(the mapping is the decision variable); pass Instances only "
+        "with mapping='fixed'")
+    if isinstance(instances, Instance):
+        raise err
+    try:
+        out = list(instances)
+    except TypeError:
+        raise err from None
+    if not all(isinstance(w, Workflow) for w in out):
+        raise err
     return out
 
 
@@ -195,6 +272,18 @@ class PlanRequest:
     * ``solver_options`` — solver-specific knobs: ``time_limit`` /
       ``mip_gap`` (ilp, exact), ``check`` (dp: cross-validate against the
       pseudo-polynomial oracle).
+    * ``mapping`` — the mapping axis (:mod:`repro.mapping`):
+      ``"fixed"`` (default, the paper's setting — ``instances`` are
+      pre-built :class:`Instance` objects scheduled under their baked-in
+      mapping), ``"heft"`` (``instances`` are raw
+      :class:`~repro.workflows.generators.Workflow` objects, mapped with
+      exact HEFT before scheduling), or ``"search"`` (joint mapping x
+      scheduling: candidate mappings evaluated in batch through the grid,
+      elite kept by best/robust carbon cost).
+    * ``mapping_options`` — :class:`repro.mapping.MappingOptions` knobs
+      as a dict (``seeds``, ``rounds``, ``neighbors``, ``elite``,
+      ``patience``, ``seed``, ``objective``); only valid with
+      ``mapping="search"``/``"heft"``.
     """
 
     instances: object
@@ -204,11 +293,36 @@ class PlanRequest:
     robust: bool = False
     solver: str = "heuristic"
     solver_options: dict | None = None
+    mapping: str = "fixed"
+    mapping_options: dict | None = None
 
     def resolve(self) -> tuple[list[Instance], list[list[PowerProfile]],
                                tuple[str, ...]]:
-        """The normalized (instances, profile grid, variant names) triple."""
-        instances = _as_instances(self.instances)
+        """The normalized (instances, profile grid, variant names) triple.
+
+        Mapping modes (``mapping="heft"``/``"search"``) return raw
+        :class:`Workflow` objects in the instances slot — the Planner
+        resolves them to Instances via :mod:`repro.mapping` before the
+        schedule solve.
+        """
+        if self.mapping not in MAPPING_MODES:
+            raise ValueError(
+                f"unknown mapping {self.mapping!r}; one of {MAPPING_MODES}")
+        if self.mapping == "fixed":
+            if self.mapping_options:
+                raise ValueError(
+                    "mapping_options requires mapping='heft' or 'search'")
+            instances = _as_instances(self.instances)
+        else:
+            from repro.mapping.options import MappingOptions
+
+            MappingOptions.from_dict(self.mapping_options)  # raises early
+            instances = _as_workflows(self.instances)
+            if self.deadline_scale is not None:
+                raise ValueError(
+                    "deadline_scale is mapping-dependent (ASAP makespan "
+                    "needs a mapping); crop profiles explicitly for "
+                    "mapping modes")
         if not instances:
             raise ValueError("at least one instance is required")
         grid = _as_grid(self.profiles, len(instances))

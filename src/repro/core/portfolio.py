@@ -278,12 +278,16 @@ def _greedy_starts_numpy(prep: PreparedInstance, combos) -> dict:
     return out
 
 
-def _jit_entries_total() -> int:
+def jit_entries_total() -> int:
     """Total compiled signatures across the engine's jit launchers —
     sampled before/after a bucket launch, the delta IS the retrace count
-    the bench used to assert by hand."""
+    the bench used to assert by hand (and the mapping search records per
+    evaluation batch to prove candidates ride the cached launch)."""
     from repro.obs import jax_hooks
     return sum(jax_hooks.jit_cache_entries().values())
+
+
+_jit_entries_total = jit_entries_total
 
 
 def _needed_combos(names) -> list[tuple[str, bool, bool]]:

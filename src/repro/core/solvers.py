@@ -68,6 +68,16 @@ class SolveOutput:
     lower: np.ndarray | None = None    # int64 [I, P] or None
     mip_gap: np.ndarray | None = None  # float [I, P] or None (ilp/exact)
 
+    def cost_tensor(self, names) -> np.ndarray:
+        """Dense int64 cost tensor ``[I, P, V]`` over the cell grid."""
+        names = tuple(names)
+        I = len(self.cells)
+        P = len(self.cells[0]) if I else 0
+        return np.array(
+            [[[self.cells[i][p][n].cost for n in names] for p in range(P)]
+             for i in range(I)],
+            dtype=np.int64).reshape(I, P, len(names))
+
 
 class Solver:
     """One scheduling backend serving the (instances x profiles) grid.

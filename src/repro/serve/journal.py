@@ -37,11 +37,14 @@ import numpy as np
 from repro import obs
 from repro.core.carbon import PowerProfile
 from repro.core.dag import Instance
+from repro.workflows.generators import Workflow
 
 # array-valued Instance fields; everything else rides the json meta leaf
 _INSTANCE_ARRAYS = ("dur", "proc", "task_work", "pred_ptr", "pred_idx",
                     "succ_ptr", "succ_idx", "chain_proc_ids", "topo",
                     "level")
+# array-valued Workflow fields (mapping-mode tickets journal raw DAGs)
+_WORKFLOW_ARRAYS = ("node_w", "edges", "edge_w")
 
 
 def _encode_json(obj) -> np.ndarray:
@@ -55,59 +58,92 @@ def _decode_json(arr):
 
 
 def encode_ticket(instances, grid, names, solver: str, robust: bool,
-                  options: dict | None, budget: float | None) -> dict:
+                  options: dict | None, budget: float | None,
+                  mapping: str = "fixed",
+                  mapping_options: dict | None = None) -> dict:
     """The journal entry of one resolved ticket: a nested dict of arrays
-    (what :func:`repro.checkpoint.ckpt.save_checkpoint` accepts)."""
+    (what :func:`repro.checkpoint.ckpt.save_checkpoint` accepts).
+
+    Mapping-mode tickets (``mapping != "fixed"``) carry raw
+    :class:`Workflow` DAGs in the instances slot; both shapes journal
+    self-contained."""
+    items = []
+    for inst in instances:
+        if isinstance(inst, Workflow):
+            items.append({"kind": "workflow", "name": inst.name})
+        else:
+            items.append(
+                {"name": inst.name, "num_tasks": int(inst.num_tasks),
+                 "num_workflow_tasks": int(inst.num_workflow_tasks),
+                 "proc_chains": [list(c) for c in inst.proc_chains],
+                 "idle_total": int(inst.idle_total)})
     meta = {
         "solver": solver,
         "robust": bool(robust),
         "options": options,
         "names": list(names),
         "budget": budget,
-        "instances": [
-            {"name": inst.name, "num_tasks": int(inst.num_tasks),
-             "num_workflow_tasks": int(inst.num_workflow_tasks),
-             "proc_chains": [list(c) for c in inst.proc_chains],
-             "idle_total": int(inst.idle_total)}
-            for inst in instances],
+        "mapping": mapping,
+        "mapping_options": mapping_options,
+        "instances": items,
         "scenarios": [[p.scenario for p in ps] for ps in grid],
     }
     state: dict = {"meta": {"json": _encode_json(meta)}}
     for i, inst in enumerate(instances):
-        state[f"i{i}"] = {f: np.asarray(getattr(inst, f))
-                          for f in _INSTANCE_ARRAYS}
+        fields = _WORKFLOW_ARRAYS if isinstance(inst, Workflow) \
+            else _INSTANCE_ARRAYS
+        state[f"i{i}"] = {f: np.asarray(getattr(inst, f)) for f in fields}
         for p, prof in enumerate(grid[i]):
             state[f"i{i}p{p}"] = {"bounds": np.asarray(prof.bounds),
                                   "budget": np.asarray(prof.budget)}
     return state
 
 
+class _DecodedTicket(tuple):
+    """The 7-tuple decode contract plus the mapping axis as attributes
+    (older callers keep unpacking seven values unchanged)."""
+
+    mapping: str = "fixed"
+    mapping_options: dict | None = None
+
+
 def decode_ticket(state: dict):
     """Invert :func:`encode_ticket`.
 
     Returns ``(instances, grid, names, solver, robust, options, budget)``
-    with fresh :class:`Instance`/:class:`PowerProfile` objects that
-    compare array-equal to the originals.
+    with fresh :class:`Instance`/:class:`PowerProfile`/:class:`Workflow`
+    objects that compare array-equal to the originals; the tuple also
+    carries ``.mapping`` / ``.mapping_options`` attributes (``"fixed"`` /
+    ``None`` for pre-mapping journal entries).
     """
     meta = _decode_json(state["meta"]["json"])
     instances = []
     grid = []
     for i, im in enumerate(meta["instances"]):
         arrays = state[f"i{i}"]
-        instances.append(Instance(
-            name=im["name"], num_tasks=im["num_tasks"],
-            num_workflow_tasks=im["num_workflow_tasks"],
-            proc_chains=tuple(tuple(int(t) for t in c)
-                              for c in im["proc_chains"]),
-            idle_total=im["idle_total"],
-            **{f: np.asarray(arrays[f]) for f in _INSTANCE_ARRAYS}))
+        if im.get("kind") == "workflow":
+            instances.append(Workflow(
+                name=im["name"],
+                **{f: np.asarray(arrays[f]) for f in _WORKFLOW_ARRAYS}))
+        else:
+            instances.append(Instance(
+                name=im["name"], num_tasks=im["num_tasks"],
+                num_workflow_tasks=im["num_workflow_tasks"],
+                proc_chains=tuple(tuple(int(t) for t in c)
+                                  for c in im["proc_chains"]),
+                idle_total=im["idle_total"],
+                **{f: np.asarray(arrays[f]) for f in _INSTANCE_ARRAYS}))
         grid.append([
             PowerProfile(bounds=np.asarray(state[f"i{i}p{p}"]["bounds"]),
                          budget=np.asarray(state[f"i{i}p{p}"]["budget"]),
                          scenario=meta["scenarios"][i][p])
             for p in range(len(meta["scenarios"][i]))])
-    return (instances, grid, tuple(meta["names"]), meta["solver"],
-            meta["robust"], meta["options"], meta["budget"])
+    out = _DecodedTicket(
+        (instances, grid, tuple(meta["names"]), meta["solver"],
+         meta["robust"], meta["options"], meta["budget"]))
+    out.mapping = meta.get("mapping", "fixed")
+    out.mapping_options = meta.get("mapping_options")
+    return out
 
 
 class TicketJournal:

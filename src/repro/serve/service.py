@@ -265,6 +265,8 @@ class Ticket:
         self.solver = request.solver if request.solver else "heuristic"
         self.robust = bool(request.robust)
         self.options = request.solver_options
+        self.mapping = request.mapping if request.mapping else "fixed"
+        self.mapping_options = request.mapping_options
         self.admitted = time.monotonic()
         self.deadline = None if budget is None else self.admitted + budget
         self.vdeadline = self.deadline if self.deadline is not None \
@@ -316,10 +318,12 @@ class Ticket:
     def _coalesce_key(self):
         try:
             opts = tuple(sorted((self.options or {}).items()))
+            mopts = tuple(sorted((self.mapping_options or {}).items()))
         except TypeError:                      # unhashable option values:
             opts = object()                    # unique key, no coalescing
+            mopts = ()
         return (self.solver, self.engine, self.names, len(self.grid[0]),
-                self.robust, opts)
+                self.robust, opts, self.mapping, mopts)
 
 
 class _WorkerSlot:
@@ -539,7 +543,8 @@ class PlanService:
                 ticket.journal_seq = seq
                 self._journal.record(seq, encode_ticket(
                     instances, grid, names, ticket.solver, ticket.robust,
-                    ticket.options, budget))
+                    ticket.options, budget, mapping=ticket.mapping,
+                    mapping_options=ticket.mapping_options))
             heapq.heappush(self._queue, (ticket.vdeadline, seq, ticket))
             self._bump(submitted=1)
             self._m_depth.set(depth + 1)
@@ -577,8 +582,9 @@ class PlanService:
             self._bump(replay_deferred=deferred)
         for seq, state in pending:
             try:
+                decoded = decode_ticket(state)
                 (instances, grid, names, solver, robust, options,
-                 budget) = decode_ticket(state)
+                 budget) = decoded
                 validate_resolved(instances, grid)
             except Exception:
                 self._journal.resolve(seq)
@@ -587,7 +593,9 @@ class PlanService:
             req = PlanRequest(
                 instances=instances, profiles=grid,
                 variants=names if solver == "heuristic" else None,
-                robust=robust, solver=solver, solver_options=options)
+                robust=robust, solver=solver, solver_options=options,
+                mapping=decoded.mapping,
+                mapping_options=decoded.mapping_options)
             engine = resolve_engine(
                 self._base.engine,
                 fanout=len(instances) * len(grid[0])) \
@@ -930,6 +938,12 @@ class PlanService:
                 if self.injector is not None:
                     self.injector.on_solve(stage, cancel=cancel)
                 requested = tickets[0].solver
+                # mapping modes ride every chain stage (the instances
+                # are raw Workflows); fallback stages downgrade
+                # "search" to the cheap deterministic "heft" so a
+                # degraded rung never re-runs the whole search
+                mapping = tickets[0].mapping
+                mapping_options = tickets[0].mapping_options
                 if stage == requested:
                     variants = tickets[0].names \
                         if requested == "heuristic" else None
@@ -938,6 +952,9 @@ class PlanService:
                     variants = self.fallback_variants \
                         if stage == "heuristic" else None
                     options = {}
+                    if mapping != "fixed":
+                        mapping = "heft"
+                        mapping_options = None
                 if stage in ("ilp", "exact"):
                     limit = options.get("time_limit", self.ilp_time_limit)
                     if remaining is not None:
@@ -957,7 +974,8 @@ class PlanService:
                     instances=[i for t in tickets for i in t.instances],
                     profiles=[ps for t in tickets for ps in t.grid],
                     variants=variants, robust=tickets[0].robust,
-                    solver=stage, solver_options=options or None)
+                    solver=stage, solver_options=options or None,
+                    mapping=mapping, mapping_options=mapping_options)
                 return planner.plan(req, cancel=cancel)
         finally:
             self._m_inflight.dec()
@@ -984,7 +1002,12 @@ class PlanService:
                 seconds=res.seconds, robust_requested=res.robust_requested,
                 solver=res.solver, lower_bound=lower, mip_gap=gaps,
                 degraded=(stage != requested) or open_gap,
-                fallback_stage=stage, attempts=tuple(attempts))
+                fallback_stage=stage, attempts=tuple(attempts),
+                mapping_mode=res.mapping_mode,
+                mappings=None if res.mappings is None
+                else res.mappings[i0:i1],
+                mapping_info=None if res.mapping_info is None
+                else res.mapping_info[i0:i1])
             if _try_resolve(t._fut, sub):
                 self._bump(completed=1, degraded=1 if sub.degraded else 0)
                 self._m_stages.inc(stage=stage)

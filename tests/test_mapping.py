@@ -1,0 +1,455 @@
+"""The mapping subsystem: HEFT seeding, joint mapping x scheduling search,
+request validation on the mapping axis, and the serving-tier integration
+(`make test-mapping`; part of `make verify`)."""
+import numpy as np
+import pytest
+
+from repro.api import MAPPING_MODES, Planner, PlanRequest, PlanResult
+from repro.api.request import validate_resolved
+from repro.cluster import make_cluster
+from repro.core import (build_instance, deadline_from_asap, generate_profile,
+                        heft_mapping, schedule_cost, trivial_mapping)
+from repro.core.cancel import Cancelled, CancelToken
+from repro.mapping import (MappingOptions, critical_path, heft_generic,
+                           mapping_from_assignment, neighborhood,
+                           rank_priority, upward_ranks)
+from repro.workflows import Workflow, make_workflow
+
+
+@pytest.fixture(scope="module")
+def platform():
+    return make_cluster(1, seed=0)       # 6 compute procs, one per type
+
+
+def _diamond():
+    """A hand-checkable 4-task diamond: 0 -> {1, 2} -> 3."""
+    return Workflow(
+        name="diamond",
+        node_w=np.array([8, 16, 4, 8], dtype=np.int64),
+        edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]], dtype=np.int64),
+        edge_w=np.array([2, 3, 4, 5], dtype=np.int64))
+
+
+def _scarce_profile(platform, T, seed=2, cap=40):
+    return generate_profile("S3", T, platform, J=12, seed=seed,
+                            work_capacity=cap)
+
+
+# ---------------------------------------------------------------------------
+# core/heft.py direct unit tests (satellite: the stranded seed algorithm)
+# ---------------------------------------------------------------------------
+
+class TestHeft:
+    def test_upward_ranks_hand_computed(self, platform):
+        wf = _diamond()
+        exec_t = np.maximum(
+            np.ceil(wf.node_w[:, None] / platform.speed[None, :]), 1)
+        mean = exec_t.mean(axis=1)
+        rank = upward_ranks(wf, mean)
+        # sink first: rank[3] = mean[3]; then its predecessors
+        assert rank[3] == pytest.approx(mean[3])
+        assert rank[1] == pytest.approx(mean[1] + 4 + rank[3])
+        assert rank[2] == pytest.approx(mean[2] + 5 + rank[3])
+        assert rank[0] == pytest.approx(
+            mean[0] + max(2 + rank[1], 3 + rank[2]))
+        # ranks strictly decrease along every edge (priority is topological)
+        for u, v in wf.edges:
+            assert rank[u] > rank[v]
+
+    def test_heft_mapping_valid_and_deterministic(self, platform):
+        wf = make_workflow("bacass", 2, seed=5)
+        m1 = heft_mapping(wf, platform)
+        m2 = heft_mapping(wf, platform)
+        assert np.array_equal(m1.proc, m2.proc)
+        assert m1.order == m2.order and m1.comm_order == m2.comm_order
+        # every task mapped on a real compute processor, orders partition
+        assert (m1.proc >= 0).all() and (m1.proc < platform.num_compute).all()
+        assert sorted(t for o in m1.order for t in o) == list(range(wf.n))
+        build_instance(wf, m1, platform)     # asserts G_c acyclic
+
+    def test_eft_insertion_fills_hole(self):
+        """The insertion policy schedules a late-ranked short task into an
+        earlier idle hole of the busy processor instead of appending."""
+        from repro.cluster import Platform
+
+        plat = Platform(speed=np.array([1, 4], dtype=np.int64),
+                        p_idle=np.zeros(4, dtype=np.int64),
+                        p_work=np.ones(4, dtype=np.int64),
+                        type_of=np.zeros(2, dtype=np.int64))
+        # ranks (mean exec): 0 -> 16, 1 -> 10, 2 -> 5, so HEFT schedules
+        # 0, 1, 2.  Task 0 lands on p0 at [0,1); the 0->1 comm (cw=5)
+        # delays task 1 on p1 to [6,10), leaving a [0,6) hole there.
+        # Independent task 2 (exec 2 on p1) must be *inserted* into that
+        # hole (eft 2) rather than take p0's append slot (eft 9).
+        wf = Workflow(name="hole",
+                      node_w=np.array([1, 16, 8], dtype=np.int64),
+                      edges=np.array([[0, 1]], dtype=np.int64),
+                      edge_w=np.array([5], dtype=np.int64))
+        m = heft_mapping(wf, plat)
+        assert tuple(m.proc) == (0, 1, 1)
+        # order on p1 reflects insertion: task 2 at [0,2) before 1 at [6,10)
+        assert m.order[0] == (0,)
+        assert m.order[1] == (2, 1)
+        inst = build_instance(wf, m, plat)
+        assert inst.num_tasks == 4           # cross-proc edge adds a comm task
+
+    def test_heft_generic_defaults_match_heft(self, platform):
+        wf = make_workflow("eager", 2, seed=3)
+        a = heft_mapping(wf, platform)
+        b = heft_generic(wf, platform)
+        assert np.array_equal(a.proc, b.proc)
+        assert a.order == b.order and a.comm_order == b.comm_order
+
+    def test_heft_generic_allowed_restricts(self, platform):
+        wf = make_workflow("atacseq", 2, seed=3)
+        slow = platform.speed <= np.median(platform.speed)
+        m = heft_generic(wf, platform, allowed=slow)
+        assert set(np.unique(m.proc)) <= set(np.flatnonzero(slow))
+
+
+# ---------------------------------------------------------------------------
+# moves: canonical assignment completion + neighborhood
+# ---------------------------------------------------------------------------
+
+class TestMoves:
+    def test_assignment_completion_always_acyclic(self, platform):
+        wf = make_workflow("methylseq", 2, seed=7)
+        priority = rank_priority(wf, platform)
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            proc = rng.integers(platform.num_compute, size=wf.n)
+            m = mapping_from_assignment(wf, platform, proc, priority)
+            build_instance(wf, m, platform)  # asserts acyclicity of G_c
+
+    def test_critical_path_is_a_path(self, platform):
+        wf = make_workflow("eager", 2, seed=1)
+        proc = heft_mapping(wf, platform).proc
+        path = critical_path(wf, platform, proc)
+        assert len(path) >= 1
+        edge_set = {(int(u), int(v)) for u, v in wf.edges}
+        for a, b in zip(path[:-1], path[1:]):
+            assert (a, b) in edge_set
+
+    def test_neighborhood_deterministic_and_perturbing(self, platform):
+        wf = make_workflow("bacass", 2, seed=2)
+        base = heft_mapping(wf, platform).proc
+        out1 = neighborhood(wf, platform, [base],
+                            np.random.default_rng(9), 9)
+        out2 = neighborhood(wf, platform, [base],
+                            np.random.default_rng(9), 9)
+        assert len(out1) == 9
+        for (k1, v1), (k2, v2) in zip(out1, out2):
+            assert k1 == k2 and np.array_equal(v1, v2)
+        kinds = {k for k, _ in out1}
+        assert kinds == {"reassign", "swap", "migrate"}
+        assert all(not np.array_equal(v, base) for _, v in out1)
+
+
+# ---------------------------------------------------------------------------
+# request validation on the mapping axis
+# ---------------------------------------------------------------------------
+
+class TestValidation:
+    def test_mapping_modes_constant(self):
+        assert MAPPING_MODES == ("fixed", "heft", "search")
+
+    def test_unknown_mapping_rejected(self, platform):
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 300)
+        with pytest.raises(ValueError, match="unknown mapping"):
+            PlanRequest(instances=wf, profiles=prof,
+                        mapping="bogus").resolve()
+
+    @pytest.mark.parametrize("bad", [
+        {"nope": 1},                      # unknown key
+        {"seeds": 0},                     # below bound
+        {"rounds": -1},
+        {"objective": "fastest"},         # unknown objective
+        {"seeds": "many"},                # wrong type
+        "not-a-dict",
+    ])
+    def test_malformed_mapping_options_rejected(self, platform, bad):
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 300)
+        with pytest.raises(ValueError, match="mapping_options"):
+            PlanRequest(instances=wf, profiles=prof, mapping="search",
+                        mapping_options=bad).resolve()
+
+    def test_mapping_options_require_mapping_mode(self, platform, medium_instance):
+        prof = _scarce_profile(platform, 400)
+        with pytest.raises(ValueError, match="mapping_options"):
+            PlanRequest(instances=medium_instance, profiles=prof,
+                        mapping_options={"seeds": 3}).resolve()
+
+    def test_instances_rejected_in_mapping_mode(self, platform,
+                                                medium_instance):
+        prof = _scarce_profile(platform, 400)
+        with pytest.raises(TypeError, match="Workflow"):
+            PlanRequest(instances=medium_instance, profiles=prof,
+                        mapping="heft").resolve()
+
+    def test_deadline_scale_rejected_in_mapping_mode(self, platform):
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 300)
+        with pytest.raises(ValueError, match="deadline_scale"):
+            PlanRequest(instances=wf, profiles=prof, mapping="search",
+                        deadline_scale=1.5).resolve()
+
+    def test_structured_invalid_request_at_admission(self, platform):
+        from repro.serve import InvalidRequest, PlanService
+
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 300)
+        svc = PlanService(Planner(platform, engine="numpy"))
+        try:
+            for kw in ({"mapping": "bogus"},
+                       {"mapping": "search",
+                        "mapping_options": {"elite": 0}}):
+                with pytest.raises(InvalidRequest) as ei:
+                    svc.submit(PlanRequest(instances=wf, profiles=prof,
+                                           **kw))
+                assert ei.value.details["reason"]   # structured error
+        finally:
+            svc.close()
+
+    def test_validate_resolved_workflow_branch(self, platform):
+        prof = _scarce_profile(platform, 300)
+        cyclic = Workflow(name="cycle",
+                          node_w=np.array([5, 5], dtype=np.int64),
+                          edges=np.array([[0, 1], [1, 0]], dtype=np.int64),
+                          edge_w=np.array([1, 1], dtype=np.int64))
+        with pytest.raises(ValueError, match="cycle"):
+            validate_resolved([cyclic], [[prof]])
+        deep = Workflow(name="chain",
+                        node_w=np.ones(9, dtype=np.int64),
+                        edges=np.array([[i, i + 1] for i in range(8)],
+                                       dtype=np.int64),
+                        edge_w=np.zeros(8, dtype=np.int64))
+        short = generate_profile("S4", 4, platform, J=2, seed=0)
+        with pytest.raises(ValueError, match="depth"):
+            validate_resolved([deep], [[short]])
+        ok = make_workflow("bacass", 2, seed=0)
+        validate_resolved([ok], [[prof]])    # no raise
+
+
+# ---------------------------------------------------------------------------
+# joint-search quality + reproducibility
+# ---------------------------------------------------------------------------
+
+class TestSearchQuality:
+    @pytest.fixture(scope="class")
+    def setup(self, platform):
+        wf = make_workflow("bacass", 2, seed=1)
+        # horizon roomy for HEFT (3x its ASAP) yet tight for the naive
+        # round-robin comparison mapping (1.1x its much larger ASAP) —
+        # feasible for every seed, but the naive mapping has no slack to
+        # chase green windows, so the quality chain is strict
+        inst_h = build_instance(wf, heft_mapping(wf, platform), platform)
+        fixed = build_instance(wf, trivial_mapping(wf, platform), platform)
+        T = max(deadline_from_asap(inst_h, 3.0),
+                int(deadline_from_asap(fixed, 1.0) * 1.1))
+        prof = _scarce_profile(platform, T)
+        planner = Planner(platform, engine="numpy")
+        return wf, prof, planner
+
+    def test_search_beats_heft_beats_fixed_seed(self, platform, setup):
+        wf, prof, planner = setup
+        fixed = build_instance(wf, trivial_mapping(wf, platform), platform)
+        res_f = planner.plan(PlanRequest(instances=fixed, profiles=prof))
+        res_h = planner.plan(PlanRequest(instances=wf, profiles=prof,
+                                         mapping="heft"))
+        res_s = planner.plan(PlanRequest(
+            instances=wf, profiles=prof, mapping="search",
+            mapping_options={"seeds": 6, "rounds": 3, "neighbors": 9,
+                             "seed": 0}))
+        assert res_s.best().cost <= res_h.best().cost <= res_f.best().cost
+        info = res_s.mapping_info[0]
+        assert info.mode == "search" and info.candidates >= 6
+        assert info.trace == tuple(sorted(info.trace, reverse=True))
+        assert res_s.best().cost == info.trace[-1] == min(
+            info.candidate_costs)
+        # the winning mapping's instance really costs what the result says
+        inst_w = build_instance(wf, res_s.mappings[0], platform)
+        best = res_s.best()
+        assert schedule_cost(inst_w, prof, best.start) == best.cost
+
+    def test_search_bit_reproducible(self, platform, setup):
+        wf, prof, planner = setup
+        req = PlanRequest(instances=wf, profiles=prof, mapping="search",
+                          mapping_options={"seeds": 5, "rounds": 2,
+                                           "neighbors": 6, "seed": 42})
+        a = planner.plan(req)
+        b = Planner(platform, engine="numpy").plan(req)
+        assert np.array_equal(a.mappings[0].proc, b.mappings[0].proc)
+        assert a.mapping_info[0].trace == b.mapping_info[0].trace
+        assert a.mapping_info[0].label == b.mapping_info[0].label
+        assert np.array_equal(a.costs, b.costs)
+
+    def test_fixed_mode_unchanged_vs_direct_solver(self, platform, setup):
+        """mapping='fixed' results are bit-identical to the solver layer
+        invoked directly — the pre-mapping plan path is untouched."""
+        from repro.core.solvers import get_solver
+
+        wf, prof, planner = setup
+        inst = build_instance(wf, heft_mapping(wf, platform), platform)
+        res = planner.plan(PlanRequest(instances=inst, profiles=prof))
+        assert res.mapping_mode == "fixed"
+        assert res.mappings is None and res.mapping_info is None
+        out = get_solver("heuristic").solve_grid(
+            [inst], [[prof]], platform, res.variants, k=planner.k,
+            mu=planner.ls.mu, engine="numpy",
+            graphs=[planner.prepared(inst, prof.T)],
+            commit_k=planner.ls.commit_k)
+        assert np.array_equal(res.costs, out.cost_tensor(res.variants))
+
+    @pytest.mark.ilp
+    def test_gap_vs_exact_under_searched_mapping(self, platform):
+        pytest.importorskip("scipy.optimize", reason="needs scipy HiGHS")
+        wf = make_workflow("bacass", 1, seed=0)
+        inst_h = build_instance(wf, heft_mapping(wf, platform), platform)
+        T = deadline_from_asap(inst_h, 2.0)
+        prof = _scarce_profile(platform, T)
+        planner = Planner(platform, engine="numpy")
+        res = planner.plan(PlanRequest(
+            instances=wf, profiles=prof, mapping="search",
+            mapping_options={"seeds": 4, "rounds": 1, "neighbors": 4}))
+        inst_w = build_instance(wf, res.mappings[0], platform)
+        exact = planner.plan(PlanRequest(
+            instances=inst_w, profiles=prof, solver="exact",
+            solver_options={"time_limit": 60.0}))
+        gap = res.gap(exact)
+        assert gap.shape == (1, 1) and gap[0, 0] >= 1.0 - 1e-9
+
+    def test_heft_mode_info_and_wire_round_trip(self, platform, setup):
+        import json
+
+        wf, prof, planner = setup
+        res = planner.plan(PlanRequest(instances=wf, profiles=prof,
+                                       mapping="heft"))
+        assert res.mapping_mode == "heft"
+        assert np.array_equal(res.mappings[0].proc,
+                              heft_mapping(wf, platform).proc)
+        d = res.summary_dict()
+        back = PlanResult.summary_from_dict(json.loads(json.dumps(d)))
+        assert back.summary_dict() == d
+        assert back.mapping_mode == "heft"
+        assert back.mapping_info[0].mode == "heft"
+
+
+# ---------------------------------------------------------------------------
+# serving tier: cancellation, degradation, coalescing
+# ---------------------------------------------------------------------------
+
+class TestServing:
+    def test_cancel_token_stops_search(self, platform):
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 400)
+        token = CancelToken()
+        token.cancel("test")
+        with pytest.raises(Cancelled):
+            Planner(platform, engine="numpy").plan(
+                PlanRequest(instances=wf, profiles=prof, mapping="search"),
+                cancel=token)
+
+    def test_service_deadline_budget_degrades_search_to_heft(self, platform):
+        """A deadline budget too small for the search walks the fallback
+        chain; the terminal rung downgrades mapping='search' to 'heft'
+        and still returns a feasible (degraded) plan."""
+        from repro.serve import PlanService
+
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 400)
+        svc = PlanService(Planner(platform, engine="numpy"))
+        try:
+            res = svc.plan(PlanRequest(
+                instances=wf, profiles=prof, mapping="search",
+                mapping_options={"seeds": 8, "rounds": 6,
+                                 "neighbors": 16}), budget=1e-6)
+            assert res.degraded and res.fallback_stage == "asap"
+            assert any(a.endswith((":timeout", ":skipped"))
+                       for a in res.attempts)
+            assert res.mapping_mode == "heft"      # downgraded rung
+            assert res.mappings is not None
+        finally:
+            svc.close()
+
+    def test_service_search_matches_direct_plan(self, platform):
+        from repro.serve import PlanService
+
+        wf = make_workflow("bacass", 2, seed=3)
+        prof = _scarce_profile(platform, 300)
+        req = PlanRequest(instances=wf, profiles=prof, mapping="search",
+                          mapping_options={"seeds": 4, "rounds": 1,
+                                           "neighbors": 4, "seed": 7})
+        direct = Planner(platform, engine="numpy").plan(req)
+        svc = PlanService(Planner(platform, engine="numpy"))
+        try:
+            served = svc.plan(req)
+        finally:
+            svc.close()
+        assert not served.degraded
+        assert np.array_equal(served.costs, direct.costs)
+        assert np.array_equal(served.mappings[0].proc,
+                              direct.mappings[0].proc)
+
+    def test_mapping_modes_do_not_coalesce(self, platform):
+        from repro.serve.service import Ticket
+
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 300)
+        keys = []
+        for kw in ({"mapping": "heft"},
+                   {"mapping": "search"},
+                   {"mapping": "search",
+                    "mapping_options": {"seeds": 3}}):
+            req = PlanRequest(instances=wf, profiles=prof, **kw)
+            instances, grid, names = req.resolve()
+            keys.append(Ticket(req, instances, grid, names, "numpy",
+                               None)._coalesce_key())
+        assert len(set(keys)) == 3
+
+    def test_journal_replay_preserves_mapping(self, platform):
+        from repro.serve.journal import decode_ticket, encode_ticket
+
+        wf = make_workflow("methylseq", 2, seed=4)
+        prof = _scarce_profile(platform, 300)
+        state = encode_ticket(
+            [wf], [[prof]], ("exact",), "exact", True, {"time_limit": 9.0},
+            12.5, mapping="search", mapping_options={"seeds": 4})
+        dec = decode_ticket(state)
+        instances, grid, names, solver, robust, options, budget = dec
+        assert isinstance(instances[0], Workflow)
+        assert np.array_equal(instances[0].node_w, wf.node_w)
+        assert np.array_equal(instances[0].edges, wf.edges)
+        assert dec.mapping == "search"
+        assert dec.mapping_options == {"seeds": 4}
+        assert (solver, robust, budget) == ("exact", True, 12.5)
+
+
+# ---------------------------------------------------------------------------
+# batched grid launch: candidates ride the cached compile
+# ---------------------------------------------------------------------------
+
+@pytest.mark.device
+def test_candidate_batch_adds_no_jit_cache_misses(platform):
+    """Steady state, growing the candidate count adds ZERO new compiled
+    signatures: every candidate mapping lands in the same padded shape
+    bucket of the triple-vmapped launch."""
+    wf = make_workflow("bacass", 2, seed=1)
+    inst_h = build_instance(wf, heft_mapping(wf, platform), platform)
+    T = min(deadline_from_asap(inst_h, 3.0), 250)   # stay in one T bucket
+    prof = _scarce_profile(platform, T)
+    planner = Planner(platform, engine="jax")
+    # warm: compile the bucket once with a small candidate batch
+    planner.plan(PlanRequest(
+        instances=wf, profiles=[prof, prof], mapping="search",
+        mapping_options={"seeds": 3, "rounds": 1, "neighbors": 3}))
+    # steady: more than twice the candidates through the same bucket
+    res = planner.plan(PlanRequest(
+        instances=wf, profiles=[prof, prof], mapping="search",
+        mapping_options={"seeds": 6, "rounds": 2, "neighbors": 8,
+                         "seed": 1}))
+    info = res.mapping_info[0]
+    assert info.candidates > 8
+    assert sum(info.cache_misses) == 0, (
+        f"candidate fan-out retraced: {info.cache_misses}")
