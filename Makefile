@@ -9,8 +9,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-device test-host test-exact test-big test-chaos \
-	test-chaos-flake test-obs test-mapping bench bench-smoke \
-	planner-smoke verify
+	test-chaos-flake test-obs test-mapping test-sharded bench \
+	bench-smoke planner-smoke verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -60,6 +60,14 @@ test-obs:
 test-mapping:
 	$(PY) -m pytest -x -q tests/test_mapping.py
 
+# multi-device sharded grid under 8 forced virtual host devices: the
+# shard_map launch must stay bitwise-identical to single-device (the
+# flag must land before jax initializes, hence the explicit env here —
+# the test module also sets it at import for plain `pytest` runs)
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  $(PY) -m pytest -x -q tests/test_sharded_grid.py
+
 bench:
 	$(PY) -m benchmarks.run --only portfolio
 
@@ -71,5 +79,7 @@ planner-smoke:
 	PlanRequest, PlanResult, PlanningSession; print('planner api: ok')"
 
 # the PR gate: tier-1 tests + chaos drills + observability suite +
-# mapping suite + Planner import smoke + tier-2 bench refresh
-verify: test test-chaos test-obs test-mapping planner-smoke bench-smoke
+# mapping suite + sharded-grid suite + Planner import smoke + tier-2
+# bench refresh
+verify: test test-chaos test-obs test-mapping test-sharded planner-smoke \
+	bench-smoke

@@ -42,6 +42,13 @@ Emits ``benchmarks/out/BENCH_portfolio.json``:
     candidate-mapping search on a scarce profile, the saving fraction,
     and candidate throughput (acceptance: search strictly wins on >= 3
     of the 4 families);
+  * ``sharded`` — multi-device scaling data (:mod:`benchmarks
+    .fig_sharded`): the grid launch timed per forced-host-device count
+    in a subprocess (bitwise-verified against single-device) and the
+    tiled Pallas gain kernel vs its jnp twin (measured honestly: on
+    this CPU box the virtual devices share one core and the kernel runs
+    interpreted, so ``speedup_vs_1`` ~ 1 and ``crossover_n`` is null —
+    the section records real numbers, not extrapolations);
   * ``seed_reference`` — the recorded wall clock of
     ``run.py --only rank,runtime`` at the seed commit vs this one (the
     acceptance trajectory; update SEED_REFERENCE when re-measuring on new
@@ -506,7 +513,7 @@ def _mapping_section() -> dict:
 
 def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         with_jax: bool = True, n_profiles: int = 8,
-        gap_time_limit: float = 20.0):
+        gap_time_limit: float = 20.0, smoke: bool = False):
     # NOTE: the persistent compilation cache
     # (repro.kernels.backend.enable_compilation_cache) is deliberately NOT
     # enabled here: the cold measurement must include the real bucket
@@ -655,6 +662,12 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
 
     mapping = _mapping_section()
 
+    sharded = None
+    if with_jax:
+        from benchmarks.fig_sharded import section as sharded_section
+
+        sharded = sharded_section(smoke=smoke)
+
     n = len(cases)
     matrix = {"sizes": list(sizes), "clusters": list(clusters),
               "n_cases": n, "n_profiles": n_profiles}
@@ -679,6 +692,7 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
         "obs": obs_stats,
         "gaps": gaps,
         "mapping": mapping,
+        "sharded": sharded,
         "seed_reference": dict(SEED_REFERENCE) if on_reference else None,
     }
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -731,6 +745,16 @@ def run(sizes=(200,), clusters=("small",), n_cases: int = 6,
          f"search_wins={mapping['search_wins']}/{mapping['n_families']}"
          f";median_saving="
          f"{np.median([f['saving_frac'] for f in mapping['families']]) * 100:.1f}%")
+    if sharded:
+        sw, gk = sharded["device_sweep"], sharded["gain_kernel"]
+        top = sw["curve"][-1]
+        emit("portfolio_sharded", top["steady_us"],
+             f"devices={top['devices']}"
+             f";speedup_vs_1={top['speedup_vs_1']:.2f}x"
+             f";host_cpus={sw['host_cpus']}"
+             f";bitwise={all(p['bitwise_identical'] for p in sw['curve'])}"
+             f";gain_crossover_n={gk['crossover_n']}"
+             f";gain_mode={gk['kernel_mode']}")
     for gc in gaps["cases"]:
         asap_s = ("n/a" if gc["gap_asap"] is None
                   else f"{gc['gap_asap']:.3f}")

@@ -55,7 +55,8 @@ def main() -> None:
     if "portfolio" in want:
         from benchmarks.fig_portfolio import run as r8
         if args.smoke:
-            r8(sizes=(60,), clusters=("small",), n_cases=2, n_profiles=4)
+            r8(sizes=(60,), clusters=("small",), n_cases=2, n_profiles=4,
+               smoke=True)
         else:
             r8(sizes=(200,), clusters=("small",))
 

@@ -65,12 +65,19 @@ class Planner:
         fast path; bigger ones stream the blocked form
         (:class:`repro.core.greedy_jax.BlockedLP`) bit-identically, so
         ``engine="jax"`` serves instances far past the dense envelope.
+      devices: shard the jax engine's combined grid launch over this many
+        devices (``shard_map`` over the instance-row axis of each shape
+        bucket; ``sharding.ctx.grid_mesh`` builds the 1-D mesh). ``None``
+        = single-device launch. A request's ``PlanRequest.devices``
+        overrides this default per call; results are bitwise-identical
+        at any device count.
     """
 
     def __init__(self, platform, engine: str = "auto", k: int = 3,
                  ls: LocalSearchConfig | None = None, validate: bool = True,
                  graph_cache: int = 32,
-                 lp_budget_bytes: int | None = None):
+                 lp_budget_bytes: int | None = None,
+                 devices: int | None = None):
         resolve_engine(engine)              # fail fast on unknown engines
         self.platform = platform
         self.engine = engine
@@ -78,6 +85,7 @@ class Planner:
         self.ls = ls if ls is not None else LocalSearchConfig()
         self.validate = validate
         self.lp_budget_bytes = lp_budget_bytes
+        self.devices = devices
         self._graph_cache = int(graph_cache)
         self._graphs: collections.OrderedDict[tuple, PreparedGraph] = \
             collections.OrderedDict()
@@ -101,7 +109,8 @@ class Planner:
                        k=self.k, ls=self.ls, validate=self.validate,
                        graph_cache=self._graph_cache,
                        lp_budget_bytes=self.lp_budget_bytes
-                       if lp_budget_bytes is None else lp_budget_bytes)
+                       if lp_budget_bytes is None else lp_budget_bytes,
+                       devices=self.devices)
 
     # --- PreparedGraph cache ---------------------------------------------
 
@@ -158,19 +167,25 @@ class Planner:
         t0 = time.perf_counter()
         instances, grid, names = request.resolve()
         solver = resolve_solver(request.solver)
+        devices = request.devices if request.devices is not None \
+            else self.devices
         outcomes = None
         if request.mapping != "fixed":
             # mapping modes resolve raw Workflows to mapped Instances
             # first (repro.mapping); the winning instances then ride the
             # unchanged fixed-mapping path below, with winner graphs
-            # pre-seeded into the cache
+            # pre-seeded into the cache. deadline_scale is applied HERE
+            # (not in resolve()): the ASAP horizon needs a mapping, so
+            # resolve_mappings derives it from a reference HEFT mapping
+            # per workflow and returns the cropped grid
             from repro.mapping.search import resolve_mappings
 
-            outcomes = resolve_mappings(
+            outcomes, grid = resolve_mappings(
                 self, instances, grid, names, solver,
                 mode=request.mapping, options=request.mapping_options,
                 robust=bool(request.robust),
-                solver_options=request.solver_options, cancel=cancel)
+                solver_options=request.solver_options, cancel=cancel,
+                deadline_scale=request.deadline_scale, devices=devices)
             instances = [o.instance for o in outcomes]
             for o in outcomes:
                 if o.graph is not None:
@@ -192,7 +207,8 @@ class Planner:
                 mu=self.ls.mu, validate=self.validate, engine=engine,
                 graphs=graphs, commit_k=self.ls.commit_k,
                 ls_max_rounds=self.ls.max_rounds,
-                options=request.solver_options, cancel=cancel)
+                options=request.solver_options, cancel=cancel,
+                devices=devices)
         obs.registry().counter(
             "planner_plans_total", "Planner.plan calls served",
             labels=("solver", "engine")).inc(solver=solver.name,

@@ -259,7 +259,15 @@ class PlanRequest:
     * ``deadline_scale`` — optional: crop every profile to the owning
       instance's deadline ``deadline_scale x ASAP-makespan``
       (:func:`crop_profile`); lets one long grid forecast serve instances
-      with different deadlines.
+      with different deadlines. In mapping modes the ASAP makespan
+      depends on the mapping being decided, so the horizon is derived
+      from a reference HEFT mapping per workflow and every candidate is
+      evaluated under that cropped row (:func:`repro.mapping.search.
+      resolve_mappings`).
+    * ``devices`` — shard the jax engine's combined grid launch over this
+      many devices (``shard_map`` over the instance-row axis; see
+      ``sharding.ctx.grid_mesh``). ``None`` = single-device launch;
+      results are bitwise-identical at any device count.
     * ``robust`` — plan for the min-max pick across the profile axis
       (:meth:`PlanResult.pick` then returns the robust variant's nominal
       schedule instead of the nominal-best one).
@@ -295,6 +303,7 @@ class PlanRequest:
     solver_options: dict | None = None
     mapping: str = "fixed"
     mapping_options: dict | None = None
+    devices: int | None = None
 
     def resolve(self) -> tuple[list[Instance], list[list[PowerProfile]],
                                tuple[str, ...]]:
@@ -318,22 +327,32 @@ class PlanRequest:
 
             MappingOptions.from_dict(self.mapping_options)  # raises early
             instances = _as_workflows(self.instances)
-            if self.deadline_scale is not None:
-                raise ValueError(
-                    "deadline_scale is mapping-dependent (ASAP makespan "
-                    "needs a mapping); crop profiles explicitly for "
-                    "mapping modes")
         if not instances:
             raise ValueError("at least one instance is required")
+        if self.devices is not None and (
+                not isinstance(self.devices, int)
+                or isinstance(self.devices, bool) or self.devices < 1):
+            raise ValueError(
+                f"devices must be a positive int or None, "
+                f"got {self.devices!r}")
         grid = _as_grid(self.profiles, len(instances))
         P = len(grid[0])
         if any(len(ps) != P for ps in grid):
             raise ValueError("every instance needs the same number of "
                              "profiles (dense grid)")
         if self.deadline_scale is not None:
-            grid = [[crop_profile(p, deadline_from_asap(
-                        inst, self.deadline_scale)) for p in ps]
-                    for inst, ps in zip(instances, grid)]
+            if self.deadline_scale <= 0:
+                raise ValueError(
+                    f"deadline_scale must be positive, "
+                    f"got {self.deadline_scale!r}")
+            if self.mapping == "fixed":
+                grid = [[crop_profile(p, deadline_from_asap(
+                            inst, self.deadline_scale)) for p in ps]
+                        for inst, ps in zip(instances, grid)]
+            # mapping modes: the ASAP makespan depends on the mapping
+            # being decided — the Planner derives the horizon from a
+            # reference HEFT mapping and crops per workflow inside
+            # resolve_mappings (the grid passes through uncropped here)
         for inst, ps in zip(instances, grid):
             if any(p.T != ps[0].T for p in ps):
                 raise ValueError(

@@ -296,7 +296,14 @@ def _placement_step(jnp, dur, work):
 
 
 @functools.lru_cache(maxsize=1)
-def _impl():
+def _build_fns():
+    """Unjitted greedy launchers (scan / variant-vmap / profile-vmap).
+
+    Shared by :func:`_impl` (which jits them) and
+    :func:`_grid_sharded_impl` (which wraps the instance-level vmap in a
+    ``shard_map`` before jitting), so both launch paths trace the SAME
+    closures and stay bit-identical by construction.
+    """
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -318,10 +325,23 @@ def _impl():
     profile_axes = (None, None, None, 0, 0, None, None, None)
     fanout = jax.vmap(greedy_scan, in_axes=variant_axes)
     multi = jax.vmap(fanout, in_axes=profile_axes)
+    return greedy_scan, fanout, multi
+
+
+def _donate():
+    import jax
     # donate the big per-call buffers (budget timeline, masks) so repeat
     # calls reuse device memory; on CPU donation is a no-op and only warns,
     # so it is enabled off-CPU only.
-    don = (3, 4) if jax.default_backend() != "cpu" else ()
+    return (3, 4) if jax.default_backend() != "cpu" else ()
+
+
+@functools.lru_cache(maxsize=1)
+def _impl():
+    import jax
+
+    greedy_scan, fanout, multi = _build_fns()
+    don = _donate()
     return {
         "single": jax.jit(greedy_scan, donate_argnums=don),
         "fanout": jax.jit(fanout, donate_argnums=don),
@@ -331,6 +351,53 @@ def _impl():
         "grid": jax.jit(jax.vmap(multi, in_axes=(0,) * 8),
                         donate_argnums=don),
     }
+
+
+@functools.lru_cache(maxsize=8)
+def _grid_sharded_impl(ndev: int):
+    """The grid launcher sharded over ``ndev`` devices.
+
+    The instance-row axis of the combined (instances x profiles x
+    variants) launch is embarrassingly parallel, so the sharded form is a
+    ``shard_map`` of the same instance-level vmap over a 1-D "data" mesh
+    (``sharding.ctx.grid_mesh``): every device runs ``rows/ndev`` full
+    greedy scans with zero cross-device communication, and the result is
+    bitwise-identical to the single-device grid (rows are independent and
+    the per-row closure is literally the same traced function).
+    ``check_rep=False``: no replicated outputs to verify, and the scan
+    body trips the conservative replication checker.
+    """
+    import jax
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.ctx import grid_mesh
+    from repro.sharding.specs import grid_batch_spec
+
+    _, _, multi = _build_fns()
+    grid = jax.vmap(multi, in_axes=(0,) * 8)
+    spec = grid_batch_spec()
+    sharded = shard_map(grid, mesh=grid_mesh(ndev), in_specs=(spec,) * 8,
+                        out_specs=spec, check_rep=False)
+    return jax.jit(sharded, donate_argnums=_donate())
+
+
+def _grid_launch(stacked, devices):
+    """Dispatch one stacked dense-bucket grid launch, sharding the
+    instance-row axis over ``devices`` when asked (padding the row count
+    to a multiple of the device count by repeating the last row, sliced
+    off after — shard_map needs equal per-device block sizes)."""
+    if devices is None or devices <= 1:
+        return _impl()["grid"](*stacked)
+    import jax.numpy as jnp
+
+    n = stacked[0].shape[0]
+    pad = -n % devices
+    if pad:
+        stacked = tuple(
+            jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+            for a in stacked)
+    out = _grid_sharded_impl(devices)(*stacked)
+    return out[:n] if pad else out
 
 
 @functools.lru_cache(maxsize=1)
@@ -539,7 +606,7 @@ def greedy_fanout_jax(inst: Instance, profile: PowerProfile, est0, lst0,
     return starts[:, :inst.num_tasks]
 
 
-def greedy_fanout_grid_jax(bucket_rows):
+def greedy_fanout_grid_jax(bucket_rows, devices: int | None = None):
     """All (instance, profile, variant) greedy schedules of one shape bucket
     in ONE launch — the third vmap level (instances) over ``multi``.
 
@@ -552,6 +619,11 @@ def greedy_fanout_grid_jax(bucket_rows):
         dense matrix — such rows stream through the chunked scan (one
         sequence of launches per blocked row; the dense rows of the
         bucket still ride one grid launch together).
+      devices: shard the instance-row axis of the dense launch over this
+        many devices (``shard_map`` over ``sharding.ctx.grid_mesh``);
+        None / 1 = single-device grid. Results are bitwise-identical
+        either way. Blocked rows always stream unsharded (their chunk
+        loop is host-driven).
     Returns:
       int32 [I, P, V, Np] start times (caller slices off the task
       padding); a numpy array when any row is blocked, a device array
@@ -564,13 +636,13 @@ def greedy_fanout_grid_jax(bucket_rows):
     if not any(blocked):
         stacked = tuple(jnp.stack([jnp.asarray(r[a]) for r in rows])
                         for a in range(8))
-        return _impl()["grid"](*stacked)
+        return _grid_launch(stacked, devices)
     out: list = [None] * len(rows)
     dense_idx = [i for i, b in enumerate(blocked) if not b]
     if dense_idx:
         stacked = tuple(jnp.stack([jnp.asarray(rows[i][a])
                                    for i in dense_idx]) for a in range(8))
-        dense_starts = np.asarray(_impl()["grid"](*stacked))
+        dense_starts = np.asarray(_grid_launch(stacked, devices))
         for j, i in enumerate(dense_idx):
             out[i] = dense_starts[j]
     for i, r in enumerate(rows):

@@ -126,7 +126,7 @@ def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K,
     import jax.numpy as jnp
     from jax import lax
 
-    from repro.kernels.gain_scan import gains_from_windows, gather_windows
+    from repro.kernels.gain_scan import gains_windows_auto, gather_windows
 
     f32 = jnp.float32
 
@@ -183,7 +183,9 @@ def _climb_impl(mu: int, max_rounds: int, commit_k: int = _COMMIT_K,
             lo = pred_lo(start)
             hi = succ_hi(start) - dur
             win_s, win_e = gather_windows(rem.astype(f32), start, dur, mu=mu)
-            return gains_from_windows(
+            # mode-dispatched oracle: jnp prefix-sum twin on CPU, the
+            # compiled tiled Pallas kernel on TPU (bit-identical paths)
+            return gains_windows_auto(
                 win_s, win_e, workf, durf,
                 (lo - start).astype(f32), (hi - start).astype(f32), mu=mu)
 

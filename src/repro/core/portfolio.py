@@ -341,7 +341,8 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                             commit_k: int | str | None = None,
                             ls_max_rounds: int = 200,
                             lp_budget_bytes: int | None = None,
-                            cancel=None
+                            cancel=None,
+                            devices: int | None = None
                             ) -> list[list[dict[str, ScheduleResult]]]:
     """THE (instances x profiles x variants) scheduling pass.
 
@@ -387,6 +388,20 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     polled between greedy cells (numpy) / device bucket launches (jax)
     and before every per-instance local-search climb, so a cancelled
     grid stops within one chunk of work instead of finishing I x P x V.
+
+    ``devices`` shards the jax engine's combined bucket launch over that
+    many devices (``shard_map`` over the instance-row axis, see
+    :func:`repro.core.greedy_jax.greedy_fanout_grid_jax`); None / 1 is
+    the single-device launch. Bitwise-identical results either way.
+
+    Rows whose ``(instance, profile row)`` repeats earlier entries BY
+    IDENTITY (e.g. the mapping search's candidate-bucket pad rows, which
+    repeat the last candidate object) are deduped host-side: graphs,
+    overlays, local-search climbs, assembly, and validation run once per
+    unique row, and duplicates alias the results. The padded device
+    launch keeps its bucket shape — vmap cost is set by shape, and
+    shrinking the row count would compile a fresh jit signature per
+    batch size — so only the per-row host work is eliminated.
     """
     if engine not in ("numpy", "jax"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -407,18 +422,38 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     names = PORTFOLIO_VARIANTS if variants is None else tuple(variants)
     heur = any(n != "asap" for n in names)
 
+    # identity dedupe (see docstring): dup_of[i] == i marks a unique row;
+    # duplicates point at the first occurrence (always a lower index)
+    uniq: dict[tuple, int] = {}
+    dup_of: list[int] = []
+    for inst, ps in zip(instances, profile_grid):
+        key = (id(inst), tuple(id(p) for p in ps))
+        dup_of.append(uniq.setdefault(key, len(dup_of)))
+    n_dup = sum(1 for i, d in enumerate(dup_of) if d != i)
+    if n_dup:
+        obs.registry().counter(
+            "portfolio_rows_deduped_total",
+            "duplicate (instance, profile-row) grid rows aliased to a "
+            "unique row's results instead of recomputed host-side").inc(
+                n_dup)
+
     if graphs is None:
         graphs = [None] * I
-    graphs = [g if g is not None
-              else prepare_graph(inst, platform, ps[0].T, k=k,
-                                 lp_budget_bytes=lp_budget_bytes)
-              for inst, ps, g in zip(instances, profile_grid, graphs)]
+    graphs = list(graphs)
+    for i, (inst, ps) in enumerate(zip(instances, profile_grid)):
+        if graphs[i] is None:
+            graphs[i] = graphs[dup_of[i]] if dup_of[i] != i else \
+                prepare_graph(inst, platform, ps[0].T, k=k,
+                              lp_budget_bytes=lp_budget_bytes)
     need = _needed_combos(names)
     # overlays only precompute the interval subdivisions the requested
     # variants use (an asap-only request skips masks/segments entirely)
     rvals = tuple(sorted({r for (_, _, r) in need}))
-    overlays = [[overlay_profile(g, p, refined_values=rvals) for p in ps]
-                for g, ps in zip(graphs, profile_grid)]
+    overlays: list = []
+    for i, (g, ps) in enumerate(zip(graphs, profile_grid)):
+        overlays.append(
+            overlays[dup_of[i]] if dup_of[i] != i else
+            [overlay_profile(g, p, refined_values=rvals) for p in ps])
     if heur and not all(g.feasible for g in graphs):
         raise ValueError("infeasible: deadline below ASAP makespan")
 
@@ -427,6 +462,9 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
     if need and engine == "numpy":
         with obs.span("greedy_numpy", cells=I * P, combos=len(need)):
             for i in range(I):
+                if dup_of[i] != i:
+                    greedys[i] = greedys[dup_of[i]]
+                    continue
                 for p in range(P):
                     checkpoint(cancel)   # per-cell cancellation rung
                     prep = PreparedInstance(graph=graphs[i],
@@ -446,8 +484,16 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                 "bucket_launch", bucket=f"{Npad}x{Tp}",
                 instances=len(idx), rows=len(idx) * P * len(need))
             misses0 = _jit_entries_total()
+            # duplicate rows reuse the unique row's host-built tuple (the
+            # launch keeps its bucket shape; only row prep is skipped —
+            # the dedupe target shares the instance object, hence the
+            # bucket, so it was built earlier in this idx walk)
+            row_cache: dict[int, tuple] = {}
             rows = []
             for i in idx:
+                if dup_of[i] in row_cache:
+                    rows.append(row_cache[dup_of[i]])
+                    continue
                 g = graphs[i]
                 dur, work, lp, est_j, lst_j, tail = g.shared()
                 budgets = pad_budget(np.stack(
@@ -457,11 +503,13 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
                      for ov in overlays[i]]), Tp)
                 orders = pad_orders(np.stack(
                     [g.order_for(s, w) for (s, w, _) in need]), tail)
-                rows.append((dur, work, lp, budgets, masks,
-                             est_j, lst_j, orders))
+                row_cache[dup_of[i]] = (dur, work, lp, budgets, masks,
+                                        est_j, lst_j, orders)
+                rows.append(row_cache[dup_of[i]])
             try:
-                starts = np.asarray(greedy_fanout_grid_jax(rows),
-                                    dtype=np.int64)
+                starts = np.asarray(
+                    greedy_fanout_grid_jax(rows, devices=devices),
+                    dtype=np.int64)
             finally:
                 misses = max(_jit_entries_total() - misses0, 0)
                 if misses:
@@ -490,6 +538,9 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
 
         keys = [VARIANTS_BY_NAME[n] for n in ls_names]
         for i in range(I):
+            if dup_of[i] != i:
+                ls_dones[i] = ls_dones[dup_of[i]]
+                continue
             checkpoint(cancel)           # per-climb-launch rung
             ck = commit_k
             if ck == "auto":
@@ -525,13 +576,19 @@ def schedule_portfolio_grid(instances, profile_grid, platform: Platform,
         "portfolio_cells_total",
         "grid cells served by the portfolio pass, by engine",
         labels=("engine",)).inc(I * P, engine=engine)
-    return [[_assemble(names,
+    out_rows: list = []
+    for i in range(I):
+        if dup_of[i] != i:
+            out_rows.append(out_rows[dup_of[i]])
+            continue
+        out_rows.append(
+            [_assemble(names,
                        PreparedInstance(graph=graphs[i],
                                         overlay=overlays[i][p]),
                        greedys[i][p], ls_dones[i][p], mu, validate,
                        cancel=cancel)
-             for p in range(P)]
-            for i in range(I)]
+             for p in range(P)])
+    return out_rows
 
 
 def schedule_portfolio(inst: Instance, profile: PowerProfile,

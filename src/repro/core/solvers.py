@@ -104,13 +104,16 @@ class Solver:
                    k: int = 3, mu: int = 10, validate: bool = True,
                    engine: str = "numpy", graphs=None, commit_k=None,
                    ls_max_rounds: int = 200,
-                   options: dict | None = None, cancel=None) -> SolveOutput:
+                   options: dict | None = None, cancel=None,
+                   devices: int | None = None) -> SolveOutput:
         """Serve the grid. ``cancel`` is an optional
         :class:`repro.core.cancel.CancelToken` every solver polls at its
         chain-rung boundaries (between grid cells for the per-cell
         solvers) — a cancelled token makes the solve raise
         :class:`~repro.core.cancel.Cancelled` within one cell of work
-        instead of running the rest of the grid."""
+        instead of running the rest of the grid. ``devices`` shards the
+        device-resident grid launch (the heuristic jax engine); the
+        per-cell host solvers accept and ignore it."""
         raise NotImplementedError
 
     # -- shared per-cell driver for the single-column solvers -------------
@@ -181,11 +184,12 @@ class HeuristicSolver(Solver):
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
                    commit_k=None, ls_max_rounds=200, options=None,
-                   cancel=None) -> SolveOutput:
+                   cancel=None, devices=None) -> SolveOutput:
         cells = schedule_portfolio_grid(
             instances, profile_grid, platform, variants=names, k=k, mu=mu,
             validate=validate, engine=engine, graphs=graphs,
-            commit_k=commit_k, ls_max_rounds=ls_max_rounds, cancel=cancel)
+            commit_k=commit_k, ls_max_rounds=ls_max_rounds, cancel=cancel,
+            devices=devices)
         return SolveOutput(cells=cells, lower=None)
 
 
@@ -203,7 +207,7 @@ class AsapSolver(Solver):
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
                    commit_k=None, ls_max_rounds=200, options=None,
-                   cancel=None) -> SolveOutput:
+                   cancel=None, devices=None) -> SolveOutput:
         ests = [graphs[i].est0 if graphs is not None
                 else asap_schedule(inst)
                 for i, inst in enumerate(instances)]
@@ -230,7 +234,7 @@ class DpUniprocSolver(Solver):
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
                    commit_k=None, ls_max_rounds=200, options=None,
-                   cancel=None) -> SolveOutput:
+                   cancel=None, devices=None) -> SolveOutput:
         check = bool((options or {}).get("check", False))
         for inst in instances:
             if not is_uniprocessor(inst):
@@ -282,7 +286,7 @@ class IlpSolver(Solver):
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
                    commit_k=None, ls_max_rounds=200, options=None,
-                   cancel=None) -> SolveOutput:
+                   cancel=None, devices=None) -> SolveOutput:
         from repro.core.ilp import solve_ilp    # lazy: needs scipy/HiGHS
 
         opts = options or {}
@@ -332,7 +336,7 @@ class ExactSolver(Solver):
     def solve_grid(self, instances, profile_grid, platform, names, *,
                    k=3, mu=10, validate=True, engine="numpy", graphs=None,
                    commit_k=None, ls_max_rounds=200, options=None,
-                   cancel=None) -> SolveOutput:
+                   cancel=None, devices=None) -> SolveOutput:
         label = _single_label(names, self)
         I = len(instances)
         P = len(profile_grid[0]) if instances else 0

@@ -1,5 +1,5 @@
-"""Local-search gain sweep (paper §5.3, batched): Pallas TPU kernel + an
-exact jnp twin that serves CPU and the device-resident hill climb.
+"""Local-search gain sweep (paper §5.3, batched): a tiled Pallas kernel +
+an exact jnp twin that serves CPU.
 
 For every task i and every shift delta in [-mu, mu], computes the exact
 carbon-cost gain of moving task i by delta, given the current remaining-
@@ -13,15 +13,27 @@ lane-aligned windows of the timeline per task,
 and evaluates all 2*mu+1 shifts for every task at once. Two executors over
 the same windows (``repro.kernels.backend.resolve_mode`` picks one):
 
-* ``_kernel`` — the Pallas kernel: (TASK_TILE, W) VPU ops per shift,
-  W = 128 lanes, one masked reduction per delta.
+* :func:`_gain_kernel` — the tiled Pallas kernel, blocked over the
+  candidate(-segment) axis: the grid walks ``TASK_TILE``-row tiles of the
+  flattened candidate axis (a "parallel" grid dimension — tiles are
+  independent), every tile holds its two (TASK_TILE, W) windows in VMEM,
+  and the 2*mu+1 shift columns are written as ONE lane-aligned
+  (TASK_TILE, W) store built by select-accumulation over a lane iota.
+  Every op is a 2-D VPU op (masked reductions over the 128-lane window
+  axis) — no concatenate/pad inside the kernel — so the same body lowers
+  through Mosaic on TPU and runs under the interpreter on CPU.
 * :func:`gains_from_windows` — the jnp twin: every delta's masked window
   sum is a contiguous range, so all 2*mu+1 gains fall out of four prefix
   sums (O(N*mu) instead of O(N*W*mu)). All summands are integers below
   2^24, so f32 accumulation is exact in any order and the two paths are
-  bit-identical (tested). This is the CPU fast path (the interpreter walks
-  the kernel python-step by python-step) and the gain oracle of the
-  device-resident climb in :mod:`repro.core.local_search_jax`.
+  bit-identical (tested). This is the CPU fast path and stays the gain
+  oracle of the device-resident climb on CPU; on TPU the climb routes
+  through the compiled kernel (:func:`gains_windows_auto`).
+
+The jnp twin wins at small N (four prefix sums beat 2*mu+1 masked
+reductions until the kernel's tiling amortizes); the measured crossover
+vs the kernel is recorded in ``BENCH_portfolio.json`` under
+``sharded["gain_kernel"]`` (``make bench-smoke``).
 
 Gain identities (rem includes the task at its old position; the newly
 occupied region never overlaps the old window, so rem == rem-without-task
@@ -45,8 +57,24 @@ W = 128          # lane-aligned window length; supports mu <= 42
 NEG = -1e30
 
 
-def _kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref, hi_ref,
-            out_ref):
+def _gain_kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref,
+                 hi_ref, out_ref):
+    """One candidate tile of the gain sweep; all ops 2-D, Mosaic-lowerable.
+
+    Refs (one grid step = one TASK_TILE tile of the candidate axis):
+      win_s/win_e: f32 (TASK_TILE, W) timeline windows around start/end.
+      w/dur/lo/hi: f32 (TASK_TILE, 1) work, duration, RELATIVE legal
+        shift bounds (lo > hi marks a row with no legal move).
+      out: f32 (TASK_TILE, W) — lane d holds the gain of shift d - mu for
+        d < 2*mu+1, NEG beyond (the caller slices the real columns).
+
+    The shift loop is a static unroll (mu is a compile-time constant):
+    per delta, the vacated/occupied sums are two masked reductions over
+    the W lanes, and the resulting column is merged into the lane-aligned
+    accumulator with a select against the lane iota — the whole tile is
+    written back as one aligned store, so the kernel compiles on TPU
+    instead of living interpreter-only.
+    """
     pad = mu
     win_s = win_s_ref[...]                      # (TASK_TILE, W)
     win_e = win_e_ref[...]
@@ -55,13 +83,14 @@ def _kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref, hi_ref,
     lo = lo_ref[...]
     hi = hi_ref[...]
     j = jax.lax.broadcasted_iota(jnp.float32, (1, W), 1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 1)
 
     released_s = jnp.minimum(jnp.maximum(-win_s, 0.0), w)
     released_e = jnp.minimum(jnp.maximum(-win_e, 0.0), w)
     incurred_s = jnp.minimum(jnp.maximum(w - jnp.maximum(win_s, 0.0), 0.0), w)
     incurred_e = jnp.minimum(jnp.maximum(w - jnp.maximum(win_e, 0.0), 0.0), w)
 
-    cols = []
+    acc = jnp.full(out_ref.shape, NEG, jnp.float32)
     for d in range(2 * mu + 1):
         delta = d - mu
         ln = jnp.minimum(jnp.float32(abs(delta)), dur)   # (TASK_TILE, 1)
@@ -88,11 +117,9 @@ def _kernel(mu: int, win_s_ref, win_e_ref, w_ref, dur_ref, lo_ref, hi_ref,
             inc = jnp.zeros_like(w)
         gain = rel - inc
         legal = (lo <= delta) & (delta <= hi) & (delta != 0) & (w > 0)
-        cols.append(jnp.where(legal, gain, NEG))
-    block = jnp.concatenate(cols, axis=1)        # (TASK_TILE, 2*mu+1)
-    d_out = out_ref.shape[1]
-    out_ref[...] = jnp.pad(block, ((0, 0), (0, d_out - block.shape[1])),
-                           constant_values=NEG)
+        col = jnp.where(legal, gain, NEG)                # (TASK_TILE, 1)
+        acc = jnp.where(lane == d, col, acc)
+    out_ref[...] = acc
 
 
 def gather_windows(rem, start, dur, *, mu: int):
@@ -112,7 +139,8 @@ def gains_from_windows(win_s, win_e, work, dur, lo_rel, hi_rel, *, mu: int):
 
     Every delta's vacated/occupied region is a contiguous index range in
     its window, so the masked sums collapse to differences of four prefix
-    sums. Bit-identical to ``_kernel`` (integer summands, exact in f32).
+    sums. Bit-identical to :func:`_gain_kernel` (integer summands, exact
+    in f32).
 
     Args:
       win_s, win_e: f32[N, W] from :func:`gather_windows`.
@@ -160,6 +188,70 @@ def gains_from_windows(win_s, win_e, work, dur, lo_rel, hi_rel, *, mu: int):
     return jnp.where(legal, gain, NEG)
 
 
+def _kernel_call(win_s, win_e, work, dur, lo_rel, hi_rel, *, mu: int,
+                 mode: str):
+    """Launch :func:`_gain_kernel` over TASK_TILE tiles of the candidate
+    axis (``mode`` = "pallas" compiled / "interpret")."""
+    n = win_s.shape[0]
+    n_pad = -n % TASK_TILE
+
+    def pad2(x, v=0.0):
+        return jnp.pad(x, ((0, n_pad), (0, 0)), constant_values=v)
+
+    win_s = pad2(win_s)
+    win_e = pad2(win_e)
+    w2 = pad2(work[:, None])
+    dur2 = pad2(dur[:, None])
+    lo2 = pad2(lo_rel[:, None], v=1.0)   # lo > hi on padding => illegal
+    hi2 = pad2(hi_rel[:, None], v=-1.0)
+
+    n_tiles = (n + n_pad) // TASK_TILE
+    kwargs = {}
+    if mode == "pallas":
+        # candidate tiles are independent: let Mosaic parallelize the grid
+        from jax.experimental.pallas import tpu as pltpu
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",))
+    out = pl.pallas_call(
+        functools.partial(_gain_kernel, mu),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, W), jnp.float32),
+        interpret=(mode == "interpret"),
+        **kwargs,
+    )(win_s, win_e, w2, dur2, lo2, hi2)
+    return out[:n, :2 * mu + 1]
+
+
+def gains_windows_auto(win_s, win_e, work, dur, lo_rel, hi_rel, *,
+                       mu: int, interpret: bool | None = None):
+    """Mode-dispatched gain matrix over pre-gathered windows.
+
+    The shared oracle of :func:`gain_scan` and the device-resident climb
+    (:mod:`repro.core.local_search_jax`): CPU resolves to the jnp
+    prefix-sum twin, TPU/GPU to the compiled tiled kernel,
+    ``interpret=True`` forces the Pallas interpreter — all three
+    bit-identical (integer summands, exact in f32; tested).
+    Bounds are RELATIVE to the current start, as in
+    :func:`gains_from_windows`.
+    """
+    assert mu <= (W // 2) - 22, f"mu={mu} too large for W={W}"
+    mode = resolve_mode(interpret)
+    if mode == "jnp":
+        return gains_from_windows(win_s, win_e, work, dur, lo_rel, hi_rel,
+                                  mu=mu)
+    return _kernel_call(win_s, win_e, work, dur, lo_rel, hi_rel, mu=mu,
+                        mode=mode)
+
+
 @functools.partial(jax.jit, static_argnames=("mu", "interpret"))
 def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
               interpret: bool | None = None):
@@ -177,50 +269,15 @@ def gain_scan(rem, start, dur, work, lo, hi, *, mu: int = 10,
       illegal moves = -1e30.
     """
     win_s, win_e = gather_windows(rem, start, dur, mu=mu)
-    return _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi,
-                              mu=mu, interpret=interpret)
+    return gains_windows_auto(win_s, win_e, work, dur, lo - start,
+                              hi - start, mu=mu, interpret=interpret)
 
 
 def _gain_scan_windows(win_s, win_e, start, dur, work, lo, hi, *, mu,
                        interpret):
-    """Gain matrix over pre-gathered (N, W) windows; mode-dispatched."""
-    assert mu <= (W // 2) - 22, f"mu={mu} too large for W={W}"
-    mode = resolve_mode(interpret)
-    if mode == "jnp":
-        return gains_from_windows(win_s, win_e, work, dur, lo - start,
-                                  hi - start, mu=mu)
-    (n,) = start.shape
-    n_pad = -n % TASK_TILE
-
-    def pad2(x, v=0.0):
-        return jnp.pad(x, ((0, n_pad), (0, 0)), constant_values=v)
-
-    win_s = pad2(win_s)
-    win_e = pad2(win_e)
-    w2 = pad2(work[:, None])
-    dur2 = pad2(dur[:, None])
-    # relative legal shift bounds
-    lo2 = pad2((lo - start)[:, None], v=1.0)    # lo > hi on padding => illegal
-    hi2 = pad2((hi - start)[:, None], v=-1.0)
-
-    n_tiles = (n + n_pad) // TASK_TILE
-    d_out = W                                    # lane-aligned output block
-    out = pl.pallas_call(
-        functools.partial(_kernel, mu),
-        grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
-            pl.BlockSpec((TASK_TILE, W), lambda i: (i, 0)),
-            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
-            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
-            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
-            pl.BlockSpec((TASK_TILE, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((TASK_TILE, d_out), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n + n_pad, d_out), jnp.float32),
-        interpret=(mode == "interpret"),
-    )(win_s, win_e, w2, dur2, lo2, hi2)
-    return out[:n, :2 * mu + 1]
+    """Legacy absolute-bounds spelling of :func:`gains_windows_auto`."""
+    return gains_windows_auto(win_s, win_e, work, dur, lo - start,
+                              hi - start, mu=mu, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("mu", "interpret"))

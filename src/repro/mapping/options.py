@@ -48,6 +48,36 @@ class MappingOptions:
                 f"mapping_options['objective'] must be one of "
                 f"{_OBJECTIVES}, got {self.objective!r}")
 
+    def max_candidates(self) -> int:
+        """Upper bound on mappings this search evaluates: the seed
+        population plus every improvement round's full neighborhood."""
+        return self.seeds + self.rounds * self.neighbors
+
+    def shrunk_to(self, budget: int) -> "MappingOptions | None":
+        """The largest version of this search evaluating <= ``budget``
+        candidates — the serving tier's budget-aware degradation knob
+        (fallback rungs shrink the search to the remaining deadline
+        budget before dropping to plain HEFT).
+
+        Shrinks ``rounds`` first (keep the seed population, run fewer
+        improvement passes), then ``neighbors``, then ``seeds``.
+        Returns ``self`` when it already fits, ``None`` when even a
+        2-candidate search (HEFT seed + one alternative) does not —
+        callers should fall back to plain HEFT then.
+        """
+        if budget >= self.max_candidates():
+            return self
+        if budget < 2:
+            return None
+        seeds = min(self.seeds, budget)
+        left = budget - seeds
+        neighbors = min(self.neighbors, max(left, 1))
+        rounds = min(self.rounds, left // neighbors)
+        return MappingOptions(
+            seeds=seeds, rounds=rounds, neighbors=neighbors,
+            elite=min(self.elite, seeds), patience=self.patience,
+            seed=self.seed, objective=self.objective)
+
     @classmethod
     def from_dict(cls, options: "dict | MappingOptions | None") -> "MappingOptions":
         """Build from a request-supplied dict, rejecting unknown keys."""

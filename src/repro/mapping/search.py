@@ -19,6 +19,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.cancel import checkpoint
+from repro.core.cawosched import deadline_from_asap
 from repro.core.dag import FixedMapping, Instance, build_instance
 from repro.core.heft import heft_mapping
 from repro.core.portfolio import (heuristic_indices, jit_entries_total,
@@ -117,11 +118,12 @@ class _Evaluator:
     """Batch-evaluates labeled mappings through the request's solver."""
 
     def __init__(self, wf, platform, row, planner, solver, names,
-                 objective, solver_options, cancel):
+                 objective, solver_options, cancel, devices=None):
         self.wf, self.platform, self.row = wf, platform, tuple(row)
         self.planner, self.solver, self.names = planner, solver, tuple(names)
         self.objective = objective
         self.solver_options, self.cancel = solver_options, cancel
+        self.devices = devices
         self.cols = heuristic_indices(self.names)
         self.T = int(row[0].T)
         self.infeasible = 0
@@ -152,6 +154,12 @@ class _Evaluator:
             # distinct batch size would compile a fresh signature.  Pad the
             # candidate batch to a multiple of _C_BUCKET by repeating the
             # last candidate — all rounds then ride one compiled launch.
+            # The repeats are BY IDENTITY, so the portfolio pass dedupes
+            # their host-side cost (graphs/overlays/climbs/assembly run
+            # once; only the shape-stable vmap rows repeat) and nothing
+            # below this point sees the pad rows: ``built`` stops at the
+            # real candidates, so ``evaluated`` / ``candidates`` /
+            # ``candidate_costs`` count only real ones.
             pad = -len(insts) % _C_BUCKET
             insts = insts + [insts[-1]] * pad
             if graphs is not None:
@@ -163,7 +171,8 @@ class _Evaluator:
             validate=self.planner.validate, engine=engine, graphs=graphs,
             commit_k=self.planner.ls.commit_k,
             ls_max_rounds=self.planner.ls.max_rounds,
-            options=self.solver_options, cancel=self.cancel)
+            options=self.solver_options, cancel=self.cancel,
+            devices=self.devices)
         self.cache_misses.append(max(jit_entries_total() - j0, 0))
         costs = out.cost_tensor(self.names)          # [C, P, V]
         batch = []
@@ -182,14 +191,14 @@ class _Evaluator:
 def search_mapping(wf: Workflow, platform, row, *, planner, solver, names,
                    options: MappingOptions, robust: bool = False,
                    solver_options: dict | None = None,
-                   cancel=None) -> MappingOutcome:
+                   cancel=None, devices: int | None = None) -> MappingOutcome:
     """Run the alternating search for one workflow over one profile row."""
     t0 = time.perf_counter()
     objective = options.objective
     if objective == "auto":
         objective = "robust" if robust else "best"
     ev = _Evaluator(wf, platform, row, planner, solver, names, objective,
-                    solver_options, cancel)
+                    solver_options, cancel, devices=devices)
     trace: list[int] = []
     with obs.span("mapping_search", workflow=wf.name, mode="search",
                   objective=objective):
@@ -257,29 +266,53 @@ def search_mapping(wf: Workflow, platform, row, *, planner, solver, names,
 def resolve_mappings(planner, workflows, grid, names, solver, *,
                      mode: str, options=None, robust: bool = False,
                      solver_options: dict | None = None,
-                     cancel=None) -> list[MappingOutcome]:
+                     cancel=None, deadline_scale: float | None = None,
+                     devices: int | None = None
+                     ) -> tuple[list[MappingOutcome], list]:
     """Resolve one mapping per workflow for the mapping-mode plan path.
 
     ``mode="heft"`` maps each workflow with exact HEFT (no evaluation);
     ``mode="search"`` runs :func:`search_mapping`.  The returned
     instances feed the planner's normal fixed-mapping path; winner
     graphs are pre-built so the planner's cache sees them for free.
+
+    Returns ``(outcomes, grid)``: the resolved mappings plus the profile
+    grid the schedule solve must run on.  With ``deadline_scale`` set,
+    each workflow's deadline is ``scale x ASAP-makespan`` of a reference
+    exact-HEFT mapping — the mapping being decided cannot define its own
+    horizon, so the reference anchors it the way the pre-built Instance
+    does in fixed mode — and the workflow's profile row is cropped to
+    that horizon BEFORE candidates are evaluated, so search candidates
+    compete under the same deadline the winner is scheduled with
+    (candidates whose own ASAP overruns it are rejected as infeasible,
+    like any too-tight mapping).  ``devices`` shards the candidate
+    batches' grid launches (see ``Planner.devices``).
     """
+    from repro.api.request import crop_profile   # lazy: api imports us
+
     opts = MappingOptions.from_dict(options)
     outcomes: list[MappingOutcome] = []
+    out_grid: list = []
     for wf, row in zip(workflows, grid):
+        m_ref = inst_ref = None
+        if mode == "heft" or deadline_scale is not None:
+            m_ref = heft_mapping(wf, planner.platform)
+            inst_ref = build_instance(wf, m_ref, planner.platform,
+                                      name=f"{wf.name}|heft")
+        if deadline_scale is not None:
+            T = deadline_from_asap(inst_ref, deadline_scale)
+            row = [crop_profile(p, T) for p in row]
+        out_grid.append(list(row))
         if mode == "heft":
-            m = heft_mapping(wf, planner.platform)
-            inst = build_instance(wf, m, planner.platform,
-                                  name=f"{wf.name}|heft")
             outcomes.append(MappingOutcome(
-                mapping=m, instance=inst, graph=None, cost=-1,
+                mapping=m_ref, instance=inst_ref, graph=None, cost=-1,
                 info=MappingSearchInfo(mode="heft", label="heft")))
         elif mode == "search":
             outcomes.append(search_mapping(
                 wf, planner.platform, row, planner=planner, solver=solver,
                 names=names, options=opts, robust=robust,
-                solver_options=solver_options, cancel=cancel))
+                solver_options=solver_options, cancel=cancel,
+                devices=devices))
         else:
             raise ValueError(f"unknown mapping mode {mode!r}")
-    return outcomes
+    return outcomes, out_grid

@@ -125,7 +125,8 @@ _STAT_EVENTS = (
     "timeouts", "cancelled", "cancelled_solves", "worker_restarts",
     "requeued", "replayed", "replay_corrupt", "replay_deferred",
     "priority_inversions", "cancel_checks", "batches",
-    "coalesced_requests")
+    "coalesced_requests", "mapping_search_shrinks",
+    "mapping_heft_downgrades")
 
 # code -> class, filled by ServiceError.__init_subclass__ so
 # ServiceError.from_dict can rebuild the exact subclass off the wire
@@ -436,6 +437,10 @@ class PlanService:
                 self.compile_cache_dir = None
         self._planners: dict[tuple[str, bool], Planner] = {}
         self._planners_lock = threading.Lock()
+        # EMA of observed per-candidate mapping-search seconds, feeding
+        # the budget-aware fallback (how many candidates the remaining
+        # deadline budget affords); None until the first search delivers
+        self._mapping_cand_ema: float | None = None
         self._cond = threading.Condition()
         # (vdeadline, seq, ticket) min-heap; resolved tickets are removed
         # lazily on claim. seq breaks vdeadline ties FIFO.
@@ -939,9 +944,11 @@ class PlanService:
                     self.injector.on_solve(stage, cancel=cancel)
                 requested = tickets[0].solver
                 # mapping modes ride every chain stage (the instances
-                # are raw Workflows); fallback stages downgrade
-                # "search" to the cheap deterministic "heft" so a
-                # degraded rung never re-runs the whole search
+                # are raw Workflows); non-requested fallback stages
+                # degrade "search" budget-aware — shrink the search to
+                # what the remaining deadline budget affords, dropping
+                # to the cheap deterministic "heft" only when even a
+                # minimal search does not fit (see _degrade_mapping)
                 mapping = tickets[0].mapping
                 mapping_options = tickets[0].mapping_options
                 if stage == requested:
@@ -953,8 +960,10 @@ class PlanService:
                         if stage == "heuristic" else None
                     options = {}
                     if mapping != "fixed":
-                        mapping = "heft"
-                        mapping_options = None
+                        mapping, mapping_options = self._degrade_mapping(
+                            stage, mapping, mapping_options,
+                            remaining, n_workflows=sum(
+                                len(t.instances) for t in tickets))
                 if stage in ("ilp", "exact"):
                     limit = options.get("time_limit", self.ilp_time_limit)
                     if remaining is not None:
@@ -982,11 +991,75 @@ class PlanService:
             self._bump(cancel_checks=cancel.checks
                        if cancel is not None else 0)
 
+    # --- budget-aware mapping degradation ---------------------------------
+
+    # per-candidate seconds assumed before any search has delivered, the
+    # budget fraction the mapping phase may spend (the schedule solve
+    # needs the rest), and the EMA smoothing of observed costs
+    _MAPPING_CAND_DEFAULT = 0.25
+    _MAPPING_BUDGET_FRACTION = 0.5
+    _MAPPING_EMA_ALPHA = 0.3
+    # candidate cap for budget-less fallback rungs: the rung was reached
+    # on a solver error, not deadline pressure, so keep a small search
+    _MAPPING_FALLBACK_CAP = 8
+
+    def _degrade_mapping(self, stage: str, mapping: str, mapping_options,
+                         remaining: float | None, n_workflows: int
+                         ) -> tuple[str, object]:
+        """Mapping mode for a non-requested fallback rung.
+
+        ``mapping="search"`` is shrunk to the candidate count the
+        remaining deadline budget affords (per-candidate cost = EMA of
+        delivered searches, split across the batch's workflows) via
+        :meth:`MappingOptions.shrunk_to`, and only drops to plain HEFT
+        when even a 2-candidate search does not fit — or on the terminal
+        ``asap`` rung, which must stay worst-case cheap. The delivered
+        result surfaces the choice: ``attempts`` carries a
+        ``mapping:<mode>`` marker and ``mapping_info`` shows the shrunk
+        search's real candidate count.
+        """
+        if mapping != "search" or stage == "asap":
+            return "heft", None
+        from repro.mapping.options import MappingOptions
+
+        opts = MappingOptions.from_dict(mapping_options)
+        if remaining is None:
+            afford = self._MAPPING_FALLBACK_CAP
+        else:
+            per_cand = self._mapping_cand_ema \
+                if self._mapping_cand_ema is not None \
+                else self._MAPPING_CAND_DEFAULT
+            afford = int(max(remaining, 0.0) * self._MAPPING_BUDGET_FRACTION
+                         / (per_cand * max(n_workflows, 1)))
+        shrunk = opts.shrunk_to(afford)
+        if shrunk is None:
+            self._bump(mapping_heft_downgrades=1)
+            return "heft", None
+        if shrunk is not opts:
+            self._bump(mapping_search_shrinks=1)
+        return "search", shrunk.to_dict()
+
+    def _note_mapping_cost(self, res: PlanResult) -> None:
+        """Fold a delivered search's per-candidate seconds into the EMA
+        the budget-aware fallback plans with."""
+        for info in (res.mapping_info or ()):
+            if getattr(info, "mode", None) == "search" and info.candidates:
+                per = info.seconds / info.candidates
+                a = self._MAPPING_EMA_ALPHA
+                self._mapping_cand_ema = per \
+                    if self._mapping_cand_ema is None \
+                    else (1 - a) * self._mapping_cand_ema + a * per
+
     # --- delivery ---------------------------------------------------------
 
     def _deliver(self, tickets: list[Ticket], res: PlanResult, stage: str,
                  attempts: list[str]) -> None:
         requested = tickets[0].solver
+        if getattr(res, "mapping_mode", "fixed") != "fixed":
+            # surface the rung's mapping decision (search kept/shrunk vs
+            # downgraded to heft) next to the stage markers
+            attempts = attempts + [f"mapping:{res.mapping_mode}"]
+            self._note_mapping_cost(res)
         now = time.monotonic()
         i0 = 0
         for t in tickets:

@@ -10,13 +10,14 @@ from __future__ import annotations
 import math
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 _CTX: dict | None = None
 
 
 def configure(mesh) -> None:
-    """Bind logical axes to this mesh ('pod'? 'data', 'model')."""
+    """Bind logical axes to this mesh ('pod', 'data', 'model')."""
     global _CTX
     batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     _CTX = {
@@ -36,6 +37,24 @@ def configure(mesh) -> None:
 def reset() -> None:
     global _CTX
     _CTX = None
+
+
+def grid_mesh(devices: int | None = None):
+    """1-D scheduler mesh over the "data" axis for the portfolio grid.
+
+    The scheduler's combined (instances x profiles x variants) launch
+    shards its leading padded-row axis over "data"
+    (:func:`repro.sharding.specs.grid_batch_spec`); this builds the mesh
+    it runs under. ``devices=None`` takes every visible device; otherwise
+    the first ``devices`` of :func:`jax.devices` (CPU CI forces 8 virtual
+    host devices via ``--xla_force_host_platform_device_count=8``).
+    """
+    avail = jax.devices()
+    n = len(avail) if devices is None else devices
+    if not 1 <= n <= len(avail):
+        raise ValueError(
+            f"devices={devices} out of range: {len(avail)} visible")
+    return jax.sharding.Mesh(np.asarray(avail[:n]), ("data",))
 
 
 def axis_size(logical: str) -> int:

@@ -44,6 +44,20 @@ _TP_RULES: tuple[tuple[str, int], ...] = (
 _FSDP_MIN_SIZE = 1 << 20            # only shard weights >= 1M elements
 
 
+def grid_batch_spec() -> P:
+    """Spec for one row array of the scheduler's combined grid launch.
+
+    Every row tensor of the greedy fan-out (dur, work, lp, budgets, masks,
+    est, lst, orders — see ``core.greedy_jax.greedy_fanout_grid_jax``)
+    stacks per-(instance, bucket) rows on its leading axis; under
+    ``ctx.grid_mesh`` that axis shards over "data" and all trailing axes
+    (profiles / variants / tasks / time) stay replicated within a shard.
+    One spec serves all eight operands because PartitionSpecs only need to
+    name the sharded prefix.
+    """
+    return P("data")
+
+
 def _tp_axis(path: str) -> int | None:
     for pat, ax in _TP_RULES:
         if re.search(pat, path):

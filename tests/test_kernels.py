@@ -105,6 +105,109 @@ def test_gain_kernel_on_real_instance():
         assert abs((base - c2) - gains[v, d]) < 1e-3
 
 
+@pytest.mark.device
+class TestGainKernelBitIdentity:
+    """The tiled Pallas gain kernel vs the jnp prefix-sum twin.
+
+    All gain summands are integers below 2^24, so f32 accumulation is
+    exact in any order — the two executors must agree BITWISE, not just
+    within tolerance. On CPU the kernel path runs under the Pallas
+    interpreter (``interpret=True``), which executes the same kernel
+    body the TPU/GPU compiled path lowers.
+    """
+
+    @staticmethod
+    def _case(n, t, mu, seed):
+        rng = np.random.default_rng(seed)
+        rem = rng.integers(-9, 9, t).astype(np.float32)
+        dur = rng.integers(1, 9, n).astype(np.float32)
+        start = rng.integers(0, max(t - 10, 1), n).astype(np.float32)
+        work = rng.integers(0, 7, n).astype(np.float32)
+        lo = np.maximum(start - rng.integers(0, 2 * mu + 5, n), 0)
+        hi = start + rng.integers(0, 2 * mu + 5, n)
+        return tuple(jnp.asarray(a) for a in (rem, start, dur, work,
+                                              lo.astype(np.float32),
+                                              hi.astype(np.float32)))
+
+    @pytest.mark.parametrize("mu", [1, 5, 10, 21, 42])
+    @pytest.mark.parametrize("n,t", [(1, 64), (63, 300), (257, 777)])
+    def test_bit_identity_across_mu(self, n, t, mu):
+        args = self._case(n, t, mu, seed=n * t + mu)
+        twin = np.asarray(gain_scan(*args, mu=mu, interpret=None))
+        kern = np.asarray(gain_scan(*args, mu=mu, interpret=True))
+        assert (twin == kern).all()
+
+    def test_bit_identity_masked_edges(self):
+        """Window clipping at both horizon edges, rows with no legal
+        move (lo > hi), and zero-work rows — all exactly NEG-masked the
+        same way on both paths."""
+        mu = 10
+        t = 96
+        rem = jnp.asarray(np.tile([-3.0, 2.0, -1.0, 4.0], t // 4),
+                          jnp.float32)
+        start = jnp.asarray([0.0, 1.0, 90.0, 40.0, 40.0, 88.0], jnp.float32)
+        dur = jnp.asarray([4.0, 2.0, 6.0, 5.0, 5.0, 8.0], jnp.float32)
+        work = jnp.asarray([3.0, 2.0, 1.0, 2.0, 0.0, 5.0], jnp.float32)
+        lo = jnp.asarray([0.0, 0.0, 80.0, 41.0, 30.0, 0.0], jnp.float32)
+        hi = jnp.asarray([12.0, 9.0, 90.0, 39.0, 50.0, 88.0], jnp.float32)
+        twin = np.asarray(gain_scan(rem, start, dur, work, lo, hi, mu=mu,
+                                    interpret=None))
+        kern = np.asarray(gain_scan(rem, start, dur, work, lo, hi, mu=mu,
+                                    interpret=True))
+        assert (twin == kern).all()
+        assert (twin[3] == -1e30).all()      # no legal move: lo > hi
+        assert (twin[4] == -1e30).all()      # zero-work row all-illegal
+        assert (twin[:, mu] == -1e30).all()  # delta=0 always illegal
+
+    @pytest.mark.parametrize("mu", [3, 17])
+    def test_batched_bit_identity(self, mu):
+        from repro.kernels.gain_scan import gain_scan_batched
+
+        rng = np.random.default_rng(mu)
+        B, n, t = 3, 40, 256
+        rem = rng.integers(-9, 9, (B, t)).astype(np.float32)
+        dur = rng.integers(1, 9, n).astype(np.float32)
+        work = rng.integers(0, 7, n).astype(np.float32)
+        start = rng.integers(0, t - 10, (B, n)).astype(np.float32)
+        lo = np.maximum(start - 20, 0).astype(np.float32)
+        hi = (start + 20).astype(np.float32)
+        args = tuple(jnp.asarray(a) for a in (rem, start, dur, work, lo, hi))
+        twin = np.asarray(gain_scan_batched(args[0], args[1], args[2],
+                                            args[3], args[4], args[5],
+                                            mu=mu, interpret=None))
+        kern = np.asarray(gain_scan_batched(args[0], args[1], args[2],
+                                            args[3], args[4], args[5],
+                                            mu=mu, interpret=True))
+        assert twin.shape == (B, n, 2 * mu + 1)
+        assert (twin == kern).all()
+
+    def test_windows_auto_dispatch(self):
+        """gains_windows_auto is the climb's oracle: explicit interpret
+        settings pick the kernel/twin, both bitwise-equal."""
+        from repro.kernels.gain_scan import (gains_from_windows,
+                                             gains_windows_auto,
+                                             gather_windows)
+
+        mu = 8
+        rng = np.random.default_rng(0)
+        rem = jnp.asarray(rng.integers(-5, 5, 128).astype(np.float32))
+        start = jnp.asarray(rng.integers(0, 100, 30).astype(np.float32))
+        dur = jnp.asarray(rng.integers(1, 8, 30).astype(np.float32))
+        work = jnp.asarray(rng.integers(0, 6, 30).astype(np.float32))
+        win_s, win_e = gather_windows(rem, start, dur, mu=mu)
+        lo_rel = jnp.full(30, -5.0, jnp.float32)
+        hi_rel = jnp.full(30, 5.0, jnp.float32)
+        twin = np.asarray(gains_from_windows(win_s, win_e, work, dur,
+                                             lo_rel, hi_rel, mu=mu))
+        auto = np.asarray(gains_windows_auto(win_s, win_e, work, dur,
+                                             lo_rel, hi_rel, mu=mu))
+        kern = np.asarray(gains_windows_auto(win_s, win_e, work, dur,
+                                             lo_rel, hi_rel, mu=mu,
+                                             interpret=True))
+        assert (twin == auto).all()          # CPU auto = the jnp twin
+        assert (twin == kern).all()          # interpreter = same bits
+
+
 @pytest.mark.parametrize("B,S,H,hd,causal,dtype", [
     (2, 128, 2, 64, True, jnp.float32),
     (1, 256, 4, 128, True, jnp.float32),

@@ -188,12 +188,44 @@ class TestValidation:
             PlanRequest(instances=medium_instance, profiles=prof,
                         mapping="heft").resolve()
 
-    def test_deadline_scale_rejected_in_mapping_mode(self, platform):
+    def test_deadline_scale_accepted_in_mapping_mode(self, platform):
+        """Regression: deadline_scale used to raise ValueError outright
+        in mapping modes; it now resolves cleanly (the HEFT-referenced
+        horizon crop happens later, in resolve_mappings) and the grid
+        passes through resolve() uncropped."""
         wf = make_workflow("eager", 2, seed=0)
         prof = _scarce_profile(platform, 300)
-        with pytest.raises(ValueError, match="deadline_scale"):
-            PlanRequest(instances=wf, profiles=prof, mapping="search",
-                        deadline_scale=1.5).resolve()
+        for mode in ("heft", "search"):
+            insts, grid, _ = PlanRequest(
+                instances=wf, profiles=prof, mapping=mode,
+                deadline_scale=1.5).resolve()   # InvalidRequest no more
+            assert insts == [wf]
+            assert grid[0][0].T == prof.T       # crop deferred to mapping
+
+    def test_deadline_scale_crops_via_reference_heft(self, platform):
+        """In mapping modes the deadline is scale x ASAP(HEFT): every
+        produced schedule meets the HEFT-referenced deadline, which is a
+        real crop of the supplied forecast."""
+        from repro.core.estlst import makespan
+
+        wf = make_workflow("eager", 2, seed=0)
+        prof = _scarce_profile(platform, 600)
+        ref = build_instance(wf, heft_mapping(wf, platform), platform,
+                             name="ref")
+        scale = 2.0
+        want_T = deadline_from_asap(ref, scale)
+        assert want_T < prof.T                  # the crop is real
+        planner = Planner(platform, engine="numpy")
+        for mode in ("heft", "search"):
+            res = planner.plan(PlanRequest(
+                instances=wf, profiles=prof, mapping=mode,
+                deadline_scale=scale,
+                mapping_options=None if mode == "heft" else
+                {"seeds": 3, "rounds": 1, "neighbors": 4}))
+            assert res.mapping_info[0].mode == mode
+            inst = build_instance(wf, res.mappings[0], platform)
+            for r in res.results[0][0].values():
+                assert makespan(inst, r.start) <= want_T
 
     def test_structured_invalid_request_at_admission(self, platform):
         from repro.serve import InvalidRequest, PlanService
@@ -369,6 +401,7 @@ class TestServing:
             assert any(a.endswith((":timeout", ":skipped"))
                        for a in res.attempts)
             assert res.mapping_mode == "heft"      # downgraded rung
+            assert "mapping:heft" in res.attempts  # decision is surfaced
             assert res.mappings is not None
         finally:
             svc.close()
@@ -388,6 +421,7 @@ class TestServing:
         finally:
             svc.close()
         assert not served.degraded
+        assert "mapping:search" in served.attempts
         assert np.array_equal(served.costs, direct.costs)
         assert np.array_equal(served.mappings[0].proc,
                               direct.mappings[0].proc)
@@ -427,6 +461,116 @@ class TestServing:
 
 
 # ---------------------------------------------------------------------------
+# budget-aware degradation: MappingOptions.shrunk_to + the serving tier
+# ---------------------------------------------------------------------------
+
+class TestShrunkTo:
+    def test_identity_when_budget_fits(self):
+        opts = MappingOptions(seeds=4, rounds=2, neighbors=5)
+        assert opts.max_candidates() == 14
+        assert opts.shrunk_to(14) is opts
+        assert opts.shrunk_to(999) is opts
+
+    def test_none_below_minimal_search(self):
+        assert MappingOptions().shrunk_to(1) is None
+        assert MappingOptions().shrunk_to(0) is None
+        assert MappingOptions().shrunk_to(-3) is None
+
+    def test_shrinks_rounds_then_neighbors_then_seeds(self):
+        opts = MappingOptions(seeds=4, rounds=4, neighbors=10)   # 44 max
+        mid = opts.shrunk_to(24)                 # rounds give first
+        assert (mid.seeds, mid.neighbors, mid.rounds) == (4, 10, 2)
+        tight = opts.shrunk_to(7)                # then neighbors
+        assert (tight.seeds, tight.neighbors, tight.rounds) == (4, 3, 1)
+        floor = opts.shrunk_to(2)                # finally seeds
+        assert (floor.seeds, floor.rounds) == (2, 0)
+        assert floor.elite <= floor.seeds        # elite stays valid
+
+    def test_budget_respected_across_sweep(self):
+        opts = MappingOptions(seeds=6, rounds=4, neighbors=12, elite=3,
+                              seed=9, objective="robust")
+        for budget in range(2, opts.max_candidates() + 1):
+            s = opts.shrunk_to(budget)
+            assert s.max_candidates() <= budget
+            # reproducibility knobs survive the shrink
+            assert s.seed == opts.seed and s.objective == opts.objective
+
+
+class TestBudgetAwareFallback:
+    """The serving tier's `_degrade_mapping`: fallback rungs shrink the
+    search to what the remaining deadline budget affords (per-candidate
+    EMA) instead of always dropping to HEFT."""
+
+    @pytest.fixture()
+    def svc(self, platform):
+        from repro.serve import PlanService
+
+        svc = PlanService(Planner(platform, engine="numpy"))
+        yield svc
+        svc.close()
+
+    def test_shrinks_search_when_budget_affords(self, svc):
+        svc._mapping_cand_ema = 1.0              # 1 s per candidate
+        mode, opts = svc._degrade_mapping(
+            "heuristic", "search",
+            {"seeds": 6, "rounds": 4, "neighbors": 12},
+            remaining=16.0, n_workflows=1)       # affords 16*0.5/1 = 8
+        assert mode == "search"
+        assert MappingOptions.from_dict(opts).max_candidates() <= 8
+        assert svc.stats()["mapping_search_shrinks"] == 1
+        assert svc.stats()["mapping_heft_downgrades"] == 0
+
+    def test_drops_to_heft_when_nothing_fits(self, svc):
+        svc._mapping_cand_ema = 1.0
+        mode, opts = svc._degrade_mapping(
+            "heuristic", "search", None,
+            remaining=2.0, n_workflows=1)        # affords 1 < 2 candidates
+        assert (mode, opts) == ("heft", None)
+        assert svc.stats()["mapping_heft_downgrades"] == 1
+
+    def test_batch_size_splits_the_budget(self, svc):
+        svc._mapping_cand_ema = 1.0
+        mode, _ = svc._degrade_mapping("heuristic", "search", None,
+                                       remaining=16.0, n_workflows=1)
+        assert mode == "search"
+        # same budget across 8 coalesced workflows affords only 1 each
+        mode, opts = svc._degrade_mapping("heuristic", "search", None,
+                                          remaining=16.0, n_workflows=8)
+        assert (mode, opts) == ("heft", None)
+
+    def test_capped_without_deadline(self, svc):
+        # error-triggered rung (no deadline pressure): small fixed cap
+        mode, opts = svc._degrade_mapping(
+            "heuristic", "search",
+            {"seeds": 20, "rounds": 5, "neighbors": 20},
+            remaining=None, n_workflows=1)
+        assert mode == "search"
+        assert MappingOptions.from_dict(opts).max_candidates() \
+            <= svc._MAPPING_FALLBACK_CAP
+
+    def test_terminal_asap_rung_always_heft(self, svc):
+        mode, opts = svc._degrade_mapping("asap", "search", {"seeds": 3},
+                                          remaining=1e9, n_workflows=1)
+        assert (mode, opts) == ("heft", None)
+        # non-search mappings pass straight through to heft too
+        assert svc._degrade_mapping("heuristic", "heft", None, 50.0, 1) \
+            == ("heft", None)
+
+    def test_delivered_search_feeds_the_ema(self, svc, platform):
+        wf = make_workflow("bacass", 2, seed=3)
+        prof = _scarce_profile(platform, 300)
+        assert svc._mapping_cand_ema is None
+        res = svc.plan(PlanRequest(instances=wf, profiles=prof,
+                                   mapping="search",
+                                   mapping_options={"seeds": 3,
+                                                    "rounds": 1,
+                                                    "neighbors": 3}))
+        assert res.mapping_info[0].mode == "search"
+        assert svc._mapping_cand_ema is not None
+        assert svc._mapping_cand_ema > 0.0
+
+
+# ---------------------------------------------------------------------------
 # batched grid launch: candidates ride the cached compile
 # ---------------------------------------------------------------------------
 
@@ -453,3 +597,30 @@ def test_candidate_batch_adds_no_jit_cache_misses(platform):
     assert info.candidates > 8
     assert sum(info.cache_misses) == 0, (
         f"candidate fan-out retraced: {info.cache_misses}")
+
+
+@pytest.mark.device
+def test_padded_candidate_batch_counts_real_candidates_only(platform):
+    """The jax evaluator pads each candidate batch to the 8-wide shape
+    bucket by repeating the last candidate BY IDENTITY.  The portfolio
+    layer must alias the pad rows' host-side work (dedupe counter moves)
+    and the search provenance must count only real candidates — the pad
+    never leaks into `candidates` / `candidate_costs`."""
+    from repro import obs
+
+    wf = make_workflow("eager", 2, seed=2)
+    inst_h = build_instance(wf, heft_mapping(wf, platform), platform)
+    T = deadline_from_asap(inst_h, 3.0)
+    prof = _scarce_profile(platform, T)
+    before = obs.registry().value("portfolio_rows_deduped_total")
+    res = Planner(platform, engine="jax").plan(PlanRequest(
+        instances=wf, profiles=prof, mapping="search",
+        mapping_options={"seeds": 3, "rounds": 0}))
+    info = res.mapping_info[0]
+    assert info.mode == "search"
+    assert 1 <= info.candidates <= 3         # seeds only — pad rows excluded
+    assert len(info.candidate_costs) == info.candidates
+    assert len(info.candidate_labels) == info.candidates
+    after = obs.registry().value("portfolio_rows_deduped_total")
+    # the 8-bucket's >= 5 pad rows were recognized as identity repeats
+    assert after - before >= 8 - info.candidates
